@@ -1,0 +1,37 @@
+"""Microbenchmarks: quantization kernel (CPU interpret timing + wire-format ratio)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(rows: List[str]) -> None:
+    for n in (1 << 16, 1 << 20):
+        x = jax.random.normal(jax.random.key(0), (n,))
+        key = jax.random.key(1)
+
+        q = jax.jit(lambda k, v: kops.quantize(k, v, bits=8, block_size=1024))
+        us = _time(q, key, x)
+        payload = q(key, x)
+        wire = payload["codes"].nbytes + payload["scale"].nbytes
+        rows.append(f"kernel.quant8.n{n},{us:.1f},{x.nbytes/wire:.2f}")
+
+        d = jax.jit(lambda p: kops.dequantize(p, bits=8, shape=(n,)))
+        us = _time(d, payload)
+        rows.append(f"kernel.dequant8.n{n},{us:.1f},0")
+    # compression ratio derived: fp32 -> int8 codes + fp32 scale per 1024
+    rows.append("kernel.wire_bits_per_elem_8bit,0,8.03")

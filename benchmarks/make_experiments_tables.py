@@ -1,0 +1,72 @@
+"""Generate the §Dry-run and §Roofline markdown tables from dry-run JSONL records.
+
+    PYTHONPATH=src python benchmarks/make_experiments_tables.py \
+        results/dryrun.jsonl results/dryrun_mp.jsonl > results/tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.roofline import load
+
+PEAK = {"compute": "MXU", "memory": "HBM", "collective": "ICI"}
+
+
+def gib(x):
+    return f"{x/2**30:.2f}"
+
+
+def one_liner(r) -> str:
+    b = r["bottleneck"]
+    tips = {
+        "compute": "raise arithmetic intensity (bigger per-chip tiles, fewer remat passes)",
+        "memory": "cut activation/cache traffic (fused attention kernel, bf16 stores, larger flash chunks)",
+        "collective": "shrink or overlap wire bytes (lower-bit codec, gossip/compute overlap, fatter nodes)",
+    }
+    return tips[b]
+
+
+def main(paths, label: str = "baseline"):
+    recs = []
+    for p in paths:
+        recs += load(p)
+    recs.sort(key=lambda r: (bool(r.get("multi_pod")), r["arch"], r["shape"]))
+
+    print(f"### §Dry-run ({label}) — memory + collective schedule per (arch x shape x mesh)\n")
+    print("| arch | shape | mesh | plan | args GiB/chip | temp GiB/chip | "
+          "collective breakdown (GiB/chip/step) |")
+    print("|---|---|---|---|---|---|---|")
+    for r in recs:
+        mesh = "2-pod 512" if r.get("multi_pod") else "1-pod 256"
+        plan = (f"n{r['n_nodes']} {r.get('algo','')}{r.get('bits','')}"
+                if r["kind"] == "train" else f"mp{r.get('mp','?')}")
+        coll = ", ".join(f"{k.replace('all-','a-')}:{gib(v)}"
+                         for k, v in sorted(r["collective_breakdown"].items(),
+                                            key=lambda kv: -kv[1]))
+        dcn = r.get("dcn_bytes_per_chip", 0)
+        if dcn:
+            coll += f" | DCN:{gib(dcn)}"
+        print(f"| {r['arch']} | {r['shape']} | {mesh} | {plan} | "
+              f"{gib(r['memory']['argument_bytes'])} | "
+              f"{gib(r['memory']['temp_bytes'])} | {coll} |")
+
+    print(f"\n### §Roofline ({label}) — three terms per (arch x shape), single-pod\n")
+    print("| arch | shape | t_compute s | t_memory s | t_collective s | "
+          "bottleneck | MODEL_FLOPS | useful ratio | next move |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("multi_pod"):
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+              f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+              f"**{r['bottleneck']}** | {r['model_flops_global']:.2e} | "
+              f"{r['useful_flops_ratio']:.2f} | {one_liner(r)} |")
+
+
+if __name__ == "__main__":
+    if sys.argv[1:]:
+        label = sys.argv[1]
+        main(sys.argv[2:], label=label)
+    else:
+        main(["results/dryrun.jsonl", "results/dryrun_mp.jsonl"])

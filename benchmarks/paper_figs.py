@@ -1,0 +1,139 @@
+"""One benchmark per paper table/figure (see EXPERIMENTS.md §Paper-claims).
+
+fig1  — naive compression fails; DCD/ECD converge (Supp. D / Fig. 1).
+fig2a — convergence vs epochs: centralized / D-PSGD / DCD-8bit / ECD-8bit match.
+fig2bcd/fig3 — epoch-time vs (bandwidth, latency) grid from the network cost
+        model, for AllReduce / decentralized-fp32 / decentralized-8bit.
+fig4  — 16 nodes, 4-bit aggressive compression: DCD hits its alpha-limit regime
+        while ECD keeps converging (paper §4.2/§5.4).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RandomQuantizer, make_algorithm, spectral_info, make_topology
+from repro.core.compression import measured_alpha
+from repro.core.testbed import make_problem, run
+from repro.netsim import (
+    BEST_NETWORK, HIGH_LAT, LOW_BW, WORST, NetworkCondition,
+    epoch_time, strategies,
+)
+from repro.netsim.cost_model import PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH, RESNET20_BYTES
+
+Rows = List[str]
+
+
+def fig1_naive_fails(rows: Rows) -> None:
+    prob = make_problem(jax.random.key(0), n=8, m=256, d=32, hetero=0.2, noise=0.1)
+    t0 = time.time()
+    res = {}
+    for name, comp in [("dpsgd", None),
+                       ("naive", RandomQuantizer(bits=4, block_size=32)),
+                       ("dcd", RandomQuantizer(bits=4, block_size=32))]:
+        h = run(prob, make_algorithm(name, 8, "ring", comp), T=800, lr=0.02,
+                eval_every=800)
+        res[name] = h["final_dist_opt"]
+    us = (time.time() - t0) / 3 / 800 * 1e6
+    rows.append(f"fig1.naive_vs_dcd_dist_opt_ratio,{us:.1f},{res['naive']/res['dcd']:.1f}")
+    assert res["naive"] > 10 * res["dcd"], "paper Fig.1: naive must stall"
+
+
+def fig2a_convergence(rows: Rows) -> None:
+    prob = make_problem(jax.random.key(1), n=8, m=256, d=32, hetero=0.2, noise=0.1)
+    finals: Dict[str, float] = {}
+    t0 = time.time()
+    for name, comp in [("cpsgd", None), ("dpsgd", None),
+                       ("dcd", RandomQuantizer(bits=8, block_size=32)),
+                       ("ecd", RandomQuantizer(bits=8, block_size=32))]:
+        h = run(prob, make_algorithm(name, 8, "ring", comp), T=800, lr=0.02,
+                eval_every=800)
+        finals[name] = h["final_loss"]
+    us = (time.time() - t0) / 4 / 800 * 1e6
+    worst = max(finals.values())
+    best = min(finals.values())
+    rows.append(f"fig2a.final_loss_spread,{us:.1f},{worst/best:.3f}")
+    # paper claim: compression + decentralization do not hurt convergence
+    assert worst / best < 1.6, finals
+
+
+def fig2_fig3_network_grid(rows: Rows) -> None:
+    n = 8
+    strat = strategies(RESNET20_BYTES, n)
+    grid_bw = [1.4e9, 400e6, 100e6, 50e6, 20e6, 5e6]
+    grid_lat = [0.13e-3, 1e-3, 5e-3, 20e-3]
+    t0 = time.time()
+    for lat_name, lat in [("lowlat", 0.13e-3), ("highlat", 5e-3)]:
+        for bw in grid_bw:
+            net = NetworkCondition(bw, lat)
+            times = {k: epoch_time(s, net, PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH)
+                     for k, s in strat.items()}
+            rows.append(
+                f"fig3.{lat_name}.bw{bw/1e6:g}M.epoch_s.allreduce,0,{times['allreduce']:.2f}")
+            rows.append(
+                f"fig3.{lat_name}.bw{bw/1e6:g}M.epoch_s.decent_fp,0,{times['decentralized_fp']:.2f}")
+            rows.append(
+                f"fig3.{lat_name}.bw{bw/1e6:g}M.epoch_s.decent_8bit,0,{times['decentralized_lp']:.2f}")
+    # paper claims, checked on the modeled grid:
+    best = NetworkCondition(1.4e9, 0.13e-3)
+    t_best = {k: epoch_time(s, best, PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH)
+              for k, s in strat.items()}
+    #  (1) good network: all similar (within 20%)
+    assert max(t_best.values()) / min(t_best.values()) < 1.2
+    #  (2) high latency: decentralized beats allreduce
+    hi = NetworkCondition(1.4e9, 5e-3)
+    t_hi = {k: epoch_time(s, hi, PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH)
+            for k, s in strat.items()}
+    assert t_hi["decentralized_fp"] < 0.8 * t_hi["allreduce"]
+    #  (3) low bandwidth + high latency: only compressed decentralized wins big
+    w = WORST
+    t_w = {k: epoch_time(s, w, PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH)
+           for k, s in strat.items()}
+    assert t_w["decentralized_lp"] < 0.5 * min(t_w["allreduce"], t_w["decentralized_fp"])
+    rows.append(f"fig3.worst_net_speedup_vs_allreduce,0,"
+                f"{t_w['allreduce']/t_w['decentralized_lp']:.2f}")
+    rows.append(f"fig3.grid_wall_us,{(time.time()-t0)*1e6:.0f},0")
+
+
+def fig4_aggressive_compression(rows: Rows) -> None:
+    """16 nodes, aggressive bits (paper §5.4 / Fig. 4b): the alpha budget shrinks
+    with n; empirically DCD keeps reducing past it while ECD diverges — the
+    paper's own Fig. 4b observation (see EXPERIMENTS.md fidelity notes)."""
+    n = 16
+    info = spectral_info(make_topology("ring", n))
+    z = jax.random.normal(jax.random.key(2), (2048,))
+    a4 = measured_alpha(RandomQuantizer(bits=4, block_size=2048), jax.random.key(3), z)
+    a2 = measured_alpha(RandomQuantizer(bits=2, block_size=2048), jax.random.key(3), z)
+    rows.append(f"fig4.ring16_dcd_alpha_budget,0,{info.dcd_alpha_max():.4f}")
+    rows.append(f"fig4.alpha_4bit,0,{a4:.4f}")
+    rows.append(f"fig4.alpha_2bit,0,{a2:.4f}")
+
+    prob = make_problem(jax.random.key(4), n=n, m=256, d=32, hetero=0.2, noise=0.1)
+    finals = {}
+    t0 = time.time()
+    for name in ("dcd", "ecd"):
+        # block_size=d so a whole-model block; 2 bits ~ alpha near the DCD budget
+        h = run(prob, make_algorithm(name, n, "ring",
+                                     RandomQuantizer(bits=2, block_size=32)),
+                T=800, lr=0.01, eval_every=800)
+        finals[name] = h["final_dist_opt"]
+    us = (time.time() - t0) / 2 / 800 * 1e6
+    rows.append(f"fig4.dist_opt_dcd_2bit,{us:.1f},{finals['dcd']:.4e}")
+    rows.append(f"fig4.dist_opt_ecd_2bit,{us:.1f},{finals['ecd']:.4e}")
+    # 8-bit on 16 nodes still converges for both (paper Fig. 4a)
+    for name in ("dcd", "ecd"):
+        h = run(prob, make_algorithm(name, n, "ring",
+                                     RandomQuantizer(bits=8, block_size=32)),
+                T=800, lr=0.01, eval_every=800)
+        assert h["final_dist_opt"] < 1e-2, f"{name} 8-bit on 16 nodes must converge"
+    rows.append("fig4.ring16_8bit_converges,0,1")
+
+
+def main(rows: Rows) -> None:
+    fig1_naive_fails(rows)
+    fig2a_convergence(rows)
+    fig2_fig3_network_grid(rows)
+    fig4_aggressive_compression(rows)

@@ -1,0 +1,59 @@
+"""Roofline table formatter: reads dry-run JSONL records -> markdown/CSV rows.
+
+Run the dry-runs first (they need the 512-device XLA flag => separate process):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --json results/dryrun.jsonl
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --json results/dryrun_mp.jsonl
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+
+def load(path: str) -> list:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                out.append(json.loads(line))
+    # keep the latest record per (arch, shape, multi_pod, algo)
+    latest = {}
+    for r in out:
+        latest[(r["arch"], r["shape"], r.get("multi_pod"), r.get("algo"))] = r
+    return list(latest.values())
+
+
+def fmt_table(records: list) -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | bottleneck | "
+           "useful_FLOPs | args GiB |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e}s | "
+            f"{r['t_memory_s']:.2e}s | {r['t_collective_s']:.2e}s | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['memory']['argument_bytes']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def main(rows: List[str], path: str = "results/dryrun.jsonl") -> None:
+    records = load(path)
+    if not records:
+        rows.append("roofline.records,0,0")
+        return
+    rows.append(f"roofline.records,0,{len(records)}")
+    for r in records:
+        tag = f"{r['arch']}.{r['shape']}" + (".mp" if r.get("multi_pod") else "")
+        dominant = {"compute": r["t_compute_s"], "memory": r["t_memory_s"],
+                    "collective": r["t_collective_s"]}[r["bottleneck"]]
+        rows.append(f"roofline.{tag}.dominant_{r['bottleneck']}_s,0,{dominant:.3e}")
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    main(rows)
+    print("\n".join(rows))

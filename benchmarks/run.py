@@ -1,0 +1,19 @@
+"""Benchmark driver: one section per paper table/figure + kernel microbench +
+roofline summary.  Prints ``name,us_per_call,derived`` CSV (stub contract)."""
+from __future__ import annotations
+
+import sys
+from typing import List
+
+
+def main() -> None:
+    rows: List[str] = ["name,us_per_call,derived"]
+    from benchmarks import kernel_bench, paper_figs, roofline
+    paper_figs.main(rows)
+    kernel_bench.main(rows)
+    roofline.main(rows)
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: compressed decentralized training in ~40 lines.
+
+Trains 8 decentralized nodes with DCD-PSGD (8-bit stochastic quantization on the
+wire) on a convex problem with a known optimum, and shows that:
+  * all nodes converge to the global optimum (not their local ones),
+  * naive compression of the exchanged models does NOT.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import RandomQuantizer, make_algorithm
+from repro.core.testbed import make_problem, run
+
+
+def main():
+    problem = make_problem(jax.random.key(0), n=8, m=256, d=32, hetero=0.2, noise=0.1)
+    print(f"global optimum loss: {float(problem.global_loss(problem.optimum())):.4f}\n")
+
+    quant8 = RandomQuantizer(bits=8, block_size=32)
+    for name, comp in [("cpsgd (AllReduce baseline)", None),
+                       ("dpsgd (full-precision gossip)", None),
+                       ("dcd   (8-bit difference compression)", quant8),
+                       ("ecd   (8-bit extrapolation compression)", quant8),
+                       ("naive (8-bit models on the wire)", RandomQuantizer(bits=8, block_size=32))]:
+        algo = make_algorithm(name.split()[0], 8, "ring", comp)
+        hist = run(problem, algo, T=800, lr=0.02, eval_every=400)
+        print(f"{name:42s} final_loss={hist['final_loss']:.4f} "
+              f"dist_to_opt={hist['final_dist_opt']:.2e}")
+
+    print("\nDCD/ECD match full precision; naive compression stalls (paper Fig. 1).")
+
+
+if __name__ == "__main__":
+    main()

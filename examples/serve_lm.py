@@ -1,0 +1,52 @@
+"""Serving example: batched prefill + decode with KV caches.
+
+Builds a reduced granite model, prefills a batch of prompts token-by-token (CPU
+scale), then decodes continuations with temperature sampling from the KV cache.
+Shows the serve path the decode_32k / long_500k dry-run shapes exercise — full
+cache vs sliding-window ring buffer.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.api import build_model
+
+
+def generate(model, params, prompts, steps: int, key, window=None):
+    B, P = prompts.shape
+    caches = model.init_cache(B, P + steps, window=window)
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(P):  # prefill via the decode path (teacher forcing the prompt)
+        logits, caches = step(params, caches, prompts[:, t : t + 1])
+    toks = []
+    cur = jnp.argmax(logits[:, :, :], axis=-1).astype(jnp.int32)
+    for t in range(steps):
+        toks.append(cur)
+        key, sub = jax.random.split(key)
+        logits, caches = step(params, caches, cur)
+        cur = jax.random.categorical(sub, logits[:, 0] / 0.8)[:, None].astype(jnp.int32)
+    return jnp.concatenate(toks, axis=1)
+
+
+def main():
+    cfg = get_config("granite-3-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1), (4, 8), 0, cfg.vocab)
+
+    out_full = generate(model, params, prompts, steps=16, key=jax.random.key(2))
+    print("full-cache decode:", out_full.shape, "first row:", out_full[0][:8])
+
+    out_win = generate(model, params, prompts, steps=16, key=jax.random.key(2),
+                       window=16)
+    print("ring-buffer decode:", out_win.shape, "first row:", out_win[0][:8])
+    assert out_full.shape == out_win.shape == (4, 16)
+    assert bool(jnp.all((out_full >= 0) & (out_full < cfg.vocab)))
+    print("OK: batched serving with full and sliding-window caches")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end driver: decentralized training of a ~100M-parameter LM.
+
+Trains a granite-family model (8 layers, d=768 — ~100M params) for a few hundred
+steps with DCD-PSGD 8-bit on 8 gossip nodes, synthetic Markov data, AdamW,
+checkpointing every 100 steps.  Loss must drop well below the uniform-vocab
+entropy — proving the full stack (data -> model -> compressed gossip -> optimizer
+-> checkpoint) trains end to end.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--algo dcd]
+"""
+import argparse
+import dataclasses
+import math
+
+from repro.configs import get_config
+from repro.launch.train import TrainConfig, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--algo", default="dcd", choices=["cpsgd", "dpsgd", "naive", "dcd", "ecd"])
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--big", action="store_true",
+                    help="~100M params (default: ~10M for a fast CPU run)")
+    args = ap.parse_args()
+
+    base = get_config("granite-3-2b")
+    if args.big:
+        cfg = dataclasses.replace(base, n_layers=8, d_model=768, n_heads=12,
+                                  n_kv_heads=4, d_ff=3072, vocab=32000, head_dim=64)
+    else:
+        cfg = dataclasses.replace(base, n_layers=4, d_model=256, n_heads=8,
+                                  n_kv_heads=4, d_ff=1024, vocab=512, head_dim=32)
+
+    tc = TrainConfig(algo=args.algo, bits=args.bits, n_nodes=args.nodes,
+                     seq_len=128, global_batch=args.nodes * 4, steps=args.steps,
+                     lr=1e-3, warmup=20, optimizer="adamw", ckpt_dir=args.ckpt_dir,
+                     reduced=False)
+    hist = run_training(cfg, tc)
+    uniform = math.log(cfg.vocab)
+    print(f"\nfinal loss {hist['final_loss']:.3f} vs uniform {uniform:.3f} "
+          f"({hist['wall_s']:.0f}s)")
+    if args.steps >= 150:   # short runs are for smoke only
+        assert hist["final_loss"] < 0.9 * uniform, "LM failed to learn"
+
+
+if __name__ == "__main__":
+    main()

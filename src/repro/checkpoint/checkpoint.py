@@ -1,0 +1,102 @@
+"""Pytree checkpointing: save/restore arbitrary (nested) JAX pytrees to .npz.
+
+Flattens with jax.tree path names, stores dtype-preserving arrays plus a small
+JSON manifest (step, metadata, treedef key list).  Atomic writes (tmp + rename)
+so a crashed save never corrupts the latest checkpoint.  Keeps the last ``keep``
+checkpoints per directory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
+    """Flatten to numpy; non-numpy dtypes (bf16, fp8) stored as raw-bit views."""
+    flat, dtypes = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+            arr = arr.view(np.uint8) if arr.dtype.itemsize == 1 else arr.view(
+                {2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
+        flat[key] = arr
+    return flat, dtypes
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, dtypes = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes,
+                "metadata": metadata or {}}
+    with open(path + ".json.tmp", "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, path)
+    os.replace(path + ".json.tmp", path + ".json")
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    import ml_dtypes
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(_path_str(x) for x in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        stored = manifest.get("dtypes", {}).get(key)
+        if stored and stored != str(arr.dtype):
+            # raw-bit view back to the original non-numpy dtype (e.g. bfloat16)
+            arr = arr.view(np.dtype(getattr(ml_dtypes, stored)))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                   if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f)))
+    for s in steps[:-keep] if keep else []:
+        for suffix in (".npz", ".npz.json"):
+            try:
+                os.remove(os.path.join(ckpt_dir, f"ckpt_{s:08d}{suffix}"))
+            except FileNotFoundError:
+                pass

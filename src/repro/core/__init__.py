@@ -1,0 +1,19 @@
+"""The paper's contribution: compressed decentralized SGD (DCD/ECD-PSGD)."""
+from repro.core.compression import (
+    Compressor,
+    IdentityCompressor,
+    RandomQuantizer,
+    RandomSparsifier,
+    make_compressor,
+    measured_alpha,
+)
+from repro.core.topology import make_topology, spectral_info, check_mixing_matrix
+from repro.core.algorithms import (
+    ALGORITHMS,
+    Algorithm,
+    AlgoState,
+    average_model,
+    consensus_distance,
+    make_algorithm,
+    mix,
+)

@@ -1,0 +1,184 @@
+"""The paper's algorithms, in their mathematically transparent *stacked* form.
+
+Every local model lives in a pytree whose leaves carry a leading node axis ``n``:
+``X[i] = x^{(i)}``.  Gossip ``X W`` is then a tensordot with the (tiny, static)
+mixing matrix.  This module is the semantic reference for the sharded runtime in
+:mod:`repro.distributed` (which must agree with it numerically — tested).
+
+Implemented steps (all jittable, pure):
+
+* ``cpsgd``  — centralized AllReduce SGD baseline (paper §5 "Centralized").
+* ``dpsgd``  — full-precision D-PSGD [Lian et al. 2017]:  ``X_{t+1} = X_t W - g G``.
+* ``naive``  — D-PSGD with naively compressed exchanged models (Supp. D; must fail).
+* ``dcd``    — Algorithm 1, difference compression.
+* ``ecd``    — Algorithm 2, extrapolation compression.
+
+Gradients are supplied by the caller (stacked, one per node) so the same steps serve
+the quadratic testbeds, the LM trainer, and the property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import Compressor, IdentityCompressor
+from repro.core import topology as topo
+
+
+def mix(W: jax.Array | np.ndarray, X: Any) -> Any:
+    """``(X W^T)_i = sum_j W_ij x_j`` applied leaf-wise over the node axis."""
+    W = jnp.asarray(W, dtype=jnp.float32)
+
+    def one(leaf):
+        return jnp.tensordot(W, leaf, axes=([1], [0])).astype(leaf.dtype)
+
+    return jax.tree.map(one, X)
+
+
+class AlgoState(NamedTuple):
+    params: Any                 # stacked pytree, leading axis n
+    step: jax.Array             # scalar int32, starts at 1
+    aux: Any = None             # ecd: estimates X_tilde ; others: None
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """A decentralized training algorithm = init + step over stacked state."""
+
+    name: str
+    W: np.ndarray
+    compressor: Compressor = IdentityCompressor()
+
+    @property
+    def n_nodes(self) -> int:
+        return self.W.shape[0]
+
+    def init(self, params_single: Any) -> AlgoState:
+        """Broadcast a single model to all ``n`` nodes (paper: x_1^{(i)} = x_1)."""
+        n = self.n_nodes
+        X = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params_single)
+        aux = X if self.name == "ecd" else None
+        return AlgoState(params=X, step=jnp.asarray(1, jnp.int32), aux=aux)
+
+    def step_fn(self) -> Callable[[AlgoState, Any, jax.Array, jax.Array], AlgoState]:
+        fn = _STEPS[self.name]
+        W = self.W
+        comp = self.compressor
+
+        def step(state: AlgoState, grads: Any, key: jax.Array, lr: jax.Array) -> AlgoState:
+            return fn(state, grads, key, lr, W, comp)
+
+        return step
+
+
+# --------------------------------------------------------------------------
+# Individual algorithm steps
+# --------------------------------------------------------------------------
+
+def _sgd(X, grads, lr):
+    return jax.tree.map(lambda x, g: x - lr * g.astype(x.dtype), X, grads)
+
+
+def cpsgd_step(state, grads, key, lr, W, comp) -> AlgoState:
+    """Centralized: every node applies the exact average gradient (AllReduce)."""
+    gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0, keepdims=True), grads)
+    X = jax.tree.map(lambda x, g: x - lr * g.astype(x.dtype), state.params, gbar)
+    return AlgoState(X, state.step + 1, state.aux)
+
+
+def dpsgd_step(state, grads, key, lr, W, comp) -> AlgoState:
+    """Full-precision D-PSGD:  X_{t+1} = X_t W - lr * G."""
+    X = _sgd(mix(W, state.params), grads, lr)
+    return AlgoState(X, state.step + 1, state.aux)
+
+
+def naive_step(state, grads, key, lr, W, comp) -> AlgoState:
+    """Naive compression (Supp. D): X_{t+1} = C(X_t) W - lr G — does NOT converge."""
+    CX = comp.tree_apply(key, state.params)
+    X = _sgd(mix(W, CX), grads, lr)
+    return AlgoState(X, state.step + 1, state.aux)
+
+
+def dcd_step(state, grads, key, lr, W, comp) -> AlgoState:
+    """Algorithm 1 (DCD-PSGD).
+
+    Because every replica is updated with the *same* compressed delta that updates
+    the true model, replicas coincide with the true neighbor models; the stacked
+    form therefore needs no explicit replica storage (the sharded runtime keeps
+    them, and a test pins the equivalence).
+
+        X_half = X W - lr G ;  Z = X_half - X ;  X_{t+1} = X + C(Z)
+    """
+    X = state.params
+    X_half = _sgd(mix(W, X), grads, lr)
+    Z = jax.tree.map(lambda a, b: a - b, X_half, X)
+    CZ = comp.tree_apply(key, Z)
+    X_new = jax.tree.map(lambda x, cz: x + cz, X, CZ)
+    return AlgoState(X_new, state.step + 1, state.aux)
+
+
+def ecd_step(state, grads, key, lr, W, comp) -> AlgoState:
+    """Algorithm 2 (ECD-PSGD).
+
+    ``aux`` holds the shared estimates ``X_tilde`` (identical on all neighbors,
+    since every neighbor reconstructs from the same compressed z-value).  With
+    ``s = t+1`` the estimate-error recursion of Supp. (28)/Lemma 11 gives
+    ``E||x_tilde_t - x_t||² <= sigma_tilde²/t``:
+
+        X_half   = X_tilde W
+        X_{t+1}  = X_half - lr G
+        Z        = (1 - 0.5 s) X_t + 0.5 s X_{t+1}
+        X_tilde' = (1 - 2/s) X_tilde + (2/s) C(Z)
+    """
+    X, Xt = state.params, state.aux
+    s = (state.step + 1).astype(jnp.float32)
+    X_new = _sgd(mix(W, Xt), grads, lr)
+    Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s) * a + 0.5 * s * b, X, X_new)
+    CZ = comp.tree_apply(key, Z)
+    Xt_new = jax.tree.map(lambda xt, cz: (1.0 - 2.0 / s) * xt + (2.0 / s) * cz, Xt, CZ)
+    return AlgoState(X_new, state.step + 1, Xt_new)
+
+
+_STEPS = {
+    "cpsgd": cpsgd_step,
+    "dpsgd": dpsgd_step,
+    "naive": naive_step,
+    "dcd": dcd_step,
+    "ecd": ecd_step,
+}
+
+ALGORITHMS = tuple(_STEPS)
+
+
+def make_algorithm(
+    name: str,
+    n_nodes: int,
+    topology: str = "ring",
+    compressor: Optional[Compressor] = None,
+) -> Algorithm:
+    W = topo.make_topology(topology, n_nodes)
+    topo.check_mixing_matrix(W)
+    return Algorithm(name=name, W=W, compressor=compressor or IdentityCompressor())
+
+
+# --------------------------------------------------------------------------
+# Diagnostics
+# --------------------------------------------------------------------------
+
+def consensus_distance(X: Any) -> jax.Array:
+    """``sum_i ||x_i - x_bar||²`` — the quantity bounded by (27)/(36) in the paper."""
+
+    def one(leaf):
+        xbar = jnp.mean(leaf, axis=0, keepdims=True)
+        return jnp.sum((leaf - xbar) ** 2)
+
+    return sum(jax.tree.leaves(jax.tree.map(one, X)))
+
+
+def average_model(X: Any) -> Any:
+    """The paper's output: ``(1/n) sum_i x_T^{(i)}``."""
+    return jax.tree.map(lambda l: jnp.mean(l, axis=0), X)

@@ -1,0 +1,207 @@
+"""Unbiased stochastic compression operators (paper §4, Assumption 1.5 / 2).
+
+The paper requires ``E[C(z)] = z`` (unbiased) with either
+
+* a *signal-to-noise* bound  ``alpha² = sup ||z - C(z)||² / ||z||²``  (DCD-PSGD,
+  Theorem 1 needs ``(1-rho)² - 4 mu² alpha² > 0``), or
+* a *bounded variance*  ``E||C(z) - z||² <= sigma_tilde²/2``  (ECD-PSGD, Assumption 2).
+
+Implemented operators:
+
+* :class:`IdentityCompressor`  — alpha = 0 (recovers exact D-PSGD).
+* :class:`RandomQuantizer`     — stochastic rounding to ``bits``-bit signed levels
+  with a per-block max-abs scale (the paper's "random quantization", footnote 1).
+* :class:`RandomSparsifier`    — keep each coordinate w.p. ``p``, rescale by ``1/p``
+  (the paper's "random sparsification", footnote 2).
+
+Each operator exposes the *wire format* explicitly (``compress`` -> payload pytree,
+``decompress`` -> reconstructed array) so the distributed runtime can put the small
+payload — not the fp32 tensor — on the network, and ``wire_bits_per_element`` so the
+network cost model and the roofline analysis can account for it.
+
+All operators are pure functions of a PRNG key: jit/vmap/shard_map friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Payload = Any  # pytree of arrays
+
+
+class Compressor:
+    """Base class: unbiased stochastic compression ``C``."""
+
+    name: str = "base"
+
+    def compress(self, key: jax.Array, x: jax.Array) -> Payload:
+        raise NotImplementedError
+
+    def decompress(self, payload: Payload, like: jax.ShapeDtypeStruct) -> jax.Array:
+        raise NotImplementedError
+
+    def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """``C(x)`` — compress-then-decompress (what the receiver reconstructs)."""
+        return self.decompress(self.compress(key, x), jax.ShapeDtypeStruct(x.shape, x.dtype))
+
+    def wire_bits_per_element(self, shape=None) -> float:
+        raise NotImplementedError
+
+    # --- pytree helpers -------------------------------------------------
+    def tree_apply(self, key: jax.Array, tree: Any) -> Any:
+        """Apply ``C`` to every leaf of a pytree with independent keys."""
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        return jax.tree.unflatten(treedef, [self(k, l) for k, l in zip(keys, leaves)])
+
+    def tree_compress(self, key: jax.Array, tree: Any):
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        return treedef, [self.compress(k, l) for k, l in zip(keys, leaves)]
+
+    def tree_decompress(self, treedef, payloads, like_tree):
+        likes = jax.tree.leaves(like_tree)
+        return jax.tree.unflatten(
+            treedef,
+            [
+                self.decompress(p, jax.ShapeDtypeStruct(l.shape, l.dtype))
+                for p, l in zip(payloads, likes)
+            ],
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCompressor(Compressor):
+    """No-op compression: ``C(z) = z`` (alpha = 0, sigma_tilde = 0)."""
+
+    name: str = "identity"
+
+    def compress(self, key, x):
+        return x
+
+    def decompress(self, payload, like):
+        return payload
+
+    def wire_bits_per_element(self, shape=None) -> float:
+        return 32.0
+
+
+def _stochastic_round(key: jax.Array, v: jax.Array) -> jax.Array:
+    """Unbiased stochastic rounding of ``v`` to the two adjacent integers."""
+    floor = jnp.floor(v)
+    frac = v - floor
+    u = jax.random.uniform(key, v.shape, dtype=v.dtype)
+    return floor + (u < frac).astype(v.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomQuantizer(Compressor):
+    """Stochastic ``bits``-bit quantization with per-block max-abs scales.
+
+    For a block ``b`` with scale ``s = max|b|`` and ``L = 2^(bits-1) - 1`` levels,
+    each element is stochastically rounded to ``q in {-L..L}`` such that
+    ``E[q * s / L] = v`` — unbiased by construction.  Wire format: the integer
+    codes (int8) plus one fp32 scale per ``block_size`` elements.
+
+    ``use_kernel=True`` routes through the Pallas TPU kernel (kernels/quant.py);
+    the default pure-jnp path is the reference semantics (kernels/ref.py shares it).
+    """
+
+    bits: int = 8
+    block_size: int = 1024
+    name: str = "quant"
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        assert 2 <= self.bits <= 8, "int8 container supports 2..8 bits"
+
+    @property
+    def levels(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    def compress(self, key, x):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.quantize(key, x, bits=self.bits, block_size=self.block_size)
+        x = x.astype(jnp.float32)
+        n = x.size
+        bs = min(self.block_size, max(n, 1))
+        pad = (-n) % bs
+        flat = jnp.pad(x.reshape(-1), (0, pad))
+        blocks = flat.reshape(-1, bs)
+        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        v = blocks / safe * self.levels
+        q = _stochastic_round(key, v)
+        q = jnp.clip(q, -self.levels, self.levels).astype(jnp.int8)
+        return {"codes": q, "scale": scale.astype(jnp.float32)}
+
+    def decompress(self, payload, like):
+        q = payload["codes"].astype(jnp.float32)
+        scale = payload["scale"]
+        blocks = q * (scale / self.levels)
+        flat = blocks.reshape(-1)
+        n = int(np.prod(like.shape)) if like.shape else 1
+        return flat[:n].reshape(like.shape).astype(like.dtype)
+
+    def wire_bits_per_element(self, shape=None) -> float:
+        # int codes + amortized per-block fp32 scale
+        return self.bits + 32.0 / self.block_size
+
+    def alpha_bound(self) -> float:
+        """Worst-case signal-to-noise ratio alpha for this quantizer.
+
+        Per element in a block with scale s: |q*s/L - v| < s/L, and |v| <= s.
+        A crude bound over a block: ||Q||² <= N (s/L)²/4 while ||Z||² can be as
+        small as s² (single max element) => alpha <= sqrt(N)/(2L).  In practice
+        (measured in tests) alpha is near 1/(2L) for dense Gaussian inputs.
+        """
+        return np.sqrt(self.block_size) / (2.0 * self.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomSparsifier(Compressor):
+    """Randomized sparsification: keep w.p. ``p``, rescale kept values by ``1/p``."""
+
+    p: float = 0.25
+    name: str = "sparsify"
+
+    def compress(self, key, x):
+        x = x.astype(jnp.float32)
+        mask = jax.random.bernoulli(key, self.p, x.shape)
+        return {"values": jnp.where(mask, x / self.p, 0.0)}
+
+    def decompress(self, payload, like):
+        return payload["values"].reshape(like.shape).astype(like.dtype)
+
+    def wire_bits_per_element(self, shape=None) -> float:
+        # value (32b) + index overhead (~32b) for the kept fraction
+        return self.p * 64.0
+
+    def alpha_bound(self) -> float:
+        # E||C(z)-z||² = (1/p - 1)||z||²  => alpha = sqrt(1/p - 1)
+        return float(np.sqrt(1.0 / self.p - 1.0))
+
+
+def measured_alpha(comp: Compressor, key: jax.Array, z: jax.Array, n_samples: int = 16) -> float:
+    """Monte-Carlo estimate of ``||C(z)-z|| / ||z||`` for a given input."""
+    keys = jax.random.split(key, n_samples)
+    errs = jnp.stack([jnp.linalg.norm(comp(k, z) - z) for k in keys])
+    return float(jnp.mean(errs) / (jnp.linalg.norm(z) + 1e-12))
+
+
+REGISTRY = {
+    "identity": lambda **kw: IdentityCompressor(),
+    "quant": lambda **kw: RandomQuantizer(**kw),
+    "sparsify": lambda **kw: RandomSparsifier(**kw),
+}
+
+
+def make_compressor(name: str, **kwargs) -> Compressor:
+    return REGISTRY[name](**kwargs)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, iterate, sample_batch, stacked_node_batches

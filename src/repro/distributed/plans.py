@@ -1,0 +1,63 @@
+"""Per-architecture parallelism plans for the production meshes.
+
+Train: the 16-wide ``data`` axis (32 with the pod axis folded in) is split into
+``node x fsdp``; each gossip node owns a full replica sharded over
+``fsdp x model`` devices.  ``n_nodes`` is chosen so replica + momentum + DCD/ECD
+aux trees fit 16 GB/chip (see DESIGN.md); big archs use fewer, fatter nodes.
+
+Serve: ``(dp, mp)``; ``mp`` is picked to divide the arch's KV/latent/state heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    n_nodes: int            # gossip ring size on the single-pod mesh
+    tp: int = 8             # tensor-parallel width within a node (node*fsdp*tp = chips)
+    aux_dtype: str = "float32"   # replica/estimate storage (bf16 for the biggest archs)
+    remat: bool = True
+
+    def nodes_for(self, multi_pod: bool) -> int:
+        return self.n_nodes * (2 if multi_pod else 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    mp: int                 # tensor-parallel width (must divide head-ish dims)
+
+
+# tp sized to the model (TP for a 2B model wastes links on activations; FSDP
+# carries the sharding instead), n_nodes sized so replica+momentum+aux fit HBM.
+# HEAD-ALIGNED TP (§Perf iteration 1): tp must divide n_kv_heads, else the GQA
+# head reshape cuts across shards and GSPMD re-shards K/V every layer
+# ("involuntary full rematerialization") — measured 2.2x collective blowup on
+# mistral-123b train_4k with tp=16 (kv=8).  Baselines before this fix are in
+# results/dryrun*.jsonl; §Perf records the deltas.
+TRAIN_PLANS: Dict[str, TrainPlan] = {
+    "internvl2-76b":        TrainPlan(n_nodes=2, tp=8, aux_dtype="bfloat16"),   # kv=8
+    "zamba2-7b":            TrainPlan(n_nodes=8, tp=8),
+    "deepseek-moe-16b":     TrainPlan(n_nodes=8, tp=16),   # EP: 64 experts / 16
+    "whisper-base":         TrainPlan(n_nodes=16, tp=1),
+    "mistral-large-123b":   TrainPlan(n_nodes=2, tp=8, aux_dtype="bfloat16"),   # kv=8
+    "deepseek-v2-lite-16b": TrainPlan(n_nodes=8, tp=16),
+    "codeqwen1.5-7b":       TrainPlan(n_nodes=8, tp=8),
+    "starcoder2-15b":       TrainPlan(n_nodes=8, tp=4),                         # kv=4
+    "mamba2-370m":          TrainPlan(n_nodes=16, tp=1),
+    "granite-3-2b":         TrainPlan(n_nodes=16, tp=2),
+}
+
+SERVE_PLANS: Dict[str, ServePlan] = {
+    "internvl2-76b":        ServePlan(mp=8),
+    "zamba2-7b":            ServePlan(mp=16),
+    "deepseek-moe-16b":     ServePlan(mp=16),
+    "whisper-base":         ServePlan(mp=8),
+    "mistral-large-123b":   ServePlan(mp=8),
+    "deepseek-v2-lite-16b": ServePlan(mp=16),
+    "codeqwen1.5-7b":       ServePlan(mp=16),
+    "starcoder2-15b":       ServePlan(mp=4),
+    "mamba2-370m":          ServePlan(mp=16),
+    "granite-3-2b":         ServePlan(mp=8),
+}

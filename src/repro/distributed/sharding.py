@@ -1,0 +1,217 @@
+"""Sharding rules: map every param/cache/batch leaf to a PartitionSpec.
+
+Rule-based (MaxText-style logical axes, but derived from shapes + path names so
+it covers all ten architectures without per-arch tables):
+
+* ``experts`` leaves get expert-parallelism: the expert dim -> ``model``.
+* otherwise the largest dim divisible by the mesh axis size -> ``model``,
+  the next largest divisible dim -> ``fsdp`` (ZeRO-style within a node).
+* tiny/1-D leaves (norm gains, biases) replicate.
+* stacked-parameter leading axes (node, layer, period) are never sharded by these
+  rules except the explicit ``node`` axis of decentralized state.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_names(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+# Megatron-style tensor-parallel direction by weight name (the trailing two dims
+# of a weight are (d_in, d_out)):
+#   column-parallel (shard d_out): QKV, MLP up/gate, SSM input projections —
+#     downstream compute is head/channel-local, no communication;
+#   row-parallel (shard d_in): attention/MLP/SSM output projections — one
+#     all-reduce of the activations per block closes the TP cycle.
+_COL_PARALLEL = ("wq", "wk", "wv", "wi", "wg", "w1", "wz", "wx", "wbc", "wdt",
+                 "wuk", "wuv")
+_ROW_PARALLEL = ("wo", "out_proj", "w2")
+_HEAD_VECTORS = ("A_log", "D", "dt_bias", "norm_g", "conv_b")   # shard last dim
+# wdkv/wkr: MLA's shared latent/rope-key projections — outputs are small and
+# consumed by every head, so replicate (the latent c_kv is the compressed cache).
+_REPLICATED = ("router", "wkr", "wdkv")
+
+
+def _leaf_base(name: str) -> str:
+    return name.rsplit("/", 1)[-1]
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, node_axis: bool, n_stack_axes: int = 0,
+                n_routed: Optional[int] = None, use_fsdp: bool = True) -> P:
+    """PartitionSpec for a parameter leaf (see module docstring for the rules).
+
+    node_axis: leading dim is the decentralized node axis (stacked replicas).
+    n_stack_axes: additional leading stacked axes (layer, period).
+    """
+    name = _path_names(path)
+    base = _leaf_base(name)
+    shape = leaf.shape
+    reserved = (1 if node_axis else 0) + n_stack_axes
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    # serving mesh (dp, mp): mp plays "model", dp plays "fsdp"
+    model_name, model = ("mp", axes["mp"]) if "mp" in axes else ("model", axes.get("model", 1))
+    fsdp_name, fsdp = ("dp", axes["dp"]) if "dp" in axes else ("fsdp", axes.get("fsdp", 1))
+
+    spec: list = [None] * len(shape)
+    free = list(range(reserved, len(shape)))
+
+    def put(axis_name, size, dim) -> bool:
+        if dim in free and shape[dim] % size == 0 and shape[dim] >= size and size > 1:
+            spec[dim] = axis_name
+            free.remove(dim)
+            return True
+        return False
+
+    ndim_body = len(shape) - reserved
+    if n_routed and "experts" in name:
+        # expert parallelism: E -> model; remaining big dim -> fsdp
+        for i in list(free):
+            if shape[i] == n_routed:
+                put(model_name, model, i)
+                break
+    elif base in _REPLICATED or ndim_body == 0:
+        pass
+    elif ndim_body == 1:
+        if base in _HEAD_VECTORS:
+            put(model_name, model, len(shape) - 1)
+    elif base in _COL_PARALLEL or base == "conv_w":
+        put(model_name, model, len(shape) - 1)              # shard d_out / channels
+    elif base in _ROW_PARALLEL:
+        put(model_name, model, len(shape) - 2)              # shard d_in
+    elif base == "embed":
+        # vocab (padded to 256) over model: keeps activations replicated across TP
+        # (sharding d_model would push a d-sharded hidden through every block)
+        if not put(model_name, model, len(shape) - 2):
+            put(model_name, model, len(shape) - 1)
+    elif base == "lm_head":
+        # prefer vocab (column) so logits shard; fall back to replicating
+        if not put(model_name, model, len(shape) - 1):
+            pass
+    else:
+        # unknown 2-D+ weight: shard the largest divisible trailing dim
+        order = sorted(free, key=lambda i: -shape[i])
+        for i in order:
+            if put(model_name, model, i):
+                break
+
+    # ZeRO/FSDP: shard the largest remaining divisible dim within the node
+    # (serving skips this when the bf16 weights already fit per-chip).
+    if fsdp > 1 and use_fsdp:
+        order = sorted(free, key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] >= 2 * fsdp and put(fsdp_name, fsdp, i):
+                break
+
+    if node_axis:
+        spec[0] = "node"
+    return P(*spec)
+
+
+def stack_depth(path) -> int:
+    """How many leading stacked-layer axes a param subtree has, from its path."""
+    name = _path_names(path)
+    if name.startswith("pm/"):
+        return 2          # (n_periods, per_period, ...)
+    for pref in ("blocks/", "blocks0/", "tail/", "enc/", "dec/"):
+        if name.startswith(pref):
+            return 1
+    if name.startswith("shared_attn/") or name in ("embed", "final_ln", "lm_head",
+                                                   "enc_ln") or name.startswith("proj/"):
+        return 0
+    return 0
+
+
+def params_shardings(params: Any, mesh: Mesh, *, node_axis: bool,
+                     n_routed: Optional[int] = None, use_fsdp: bool = True) -> Any:
+    """Tree of NamedShardings matching ``params`` (possibly node-stacked)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        depth = stack_depth(path)
+        specs.append(NamedSharding(mesh, param_pspec(
+            path, leaf, mesh, node_axis=node_axis, n_stack_axes=depth,
+            n_routed=n_routed, use_fsdp=use_fsdp)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_shardings(batch_specs: Any, mesh: Mesh, *, node_axis: bool) -> Any:
+    """Batch dim -> fsdp (within a node); leading node axis when stacked."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if node_axis:
+            spec[0] = "node"
+            if leaf.shape[1] % axes.get("fsdp", 1) == 0 and axes.get("fsdp", 1) > 1:
+                spec[1] = "fsdp"
+        else:
+            dp_name = "dp" if "dp" in axes else "fsdp"
+            if leaf.shape[0] % axes.get(dp_name, 1) == 0 and axes.get(dp_name, 1) > 1:
+                spec[0] = dp_name
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_specs)
+
+
+# Where the tensor-parallel axis lives in each cache leaf (negative dim index):
+# KV/cross caches shard by KV heads; MLA by the latent/rope dim; SSM by heads.
+_CACHE_MP_DIM = {"k": -2, "v": -2, "c_kv": -1, "k_rope": -1, "h": -3, "conv": -1}
+
+
+def cache_shardings(caches: Any, mesh: Mesh, *, batch: int) -> Any:
+    """Decode caches on the (dp, mp) serve mesh.
+
+    batch -> dp when it divides; for batch=1 (long-context decode) the capacity
+    dim takes dp instead (flash-decoding-style sequence sharding).  The
+    tensor-parallel dim is name-keyed per cache type (_CACHE_MP_DIM).
+    """
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp, mp = axes["dp"], axes["mp"]
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        base = _path_names(path).rsplit("/", 1)[-1]
+        if len(shape) <= 1 or base == "pos":
+            return NamedSharding(mesh, P(*spec))
+        try:
+            b_idx = next(i for i, s in enumerate(shape) if s == batch and i <= 2)
+        except StopIteration:
+            b_idx = None
+        if b_idx is not None and batch % dp == 0 and batch >= dp and dp > 1:
+            spec[b_idx] = "dp"
+        mp_dim = _CACHE_MP_DIM.get(base)
+        if mp_dim is not None and mp > 1:
+            i = len(shape) + mp_dim
+            if 0 <= i < len(shape) and spec[i] is None and shape[i] % mp == 0 \
+                    and shape[i] >= mp:
+                spec[i] = "mp"
+        # mp still unassigned: largest remaining divisible dim
+        if "mp" not in spec and mp > 1:
+            for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+                if spec[i] is None and shape[i] % mp == 0 and shape[i] >= mp:
+                    spec[i] = "mp"
+                    break
+        # batch too small for dp: shard the largest remaining dim (capacity)
+        if "dp" not in spec and dp > 1:
+            for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+                if spec[i] is None and shape[i] % dp == 0 and shape[i] >= dp:
+                    spec[i] = "dp"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,45 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles: arbitrary input shapes (flatten/pad to the 2-D blocked view), PRNG-key ->
+seed derivation, interpret-mode fallback on non-TPU backends, and payloads in the
+same wire format as :class:`repro.core.compression.RandomQuantizer` (``codes`` int8
+``(n_blocks, block_size)`` + ``scale`` f32 ``(n_blocks, 1)``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import quant as _q
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_blocks(x: jax.Array, block_size: int) -> jax.Array:
+    n = x.size
+    pad = (-n) % block_size
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad))
+    return flat.reshape(-1, block_size)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_size"))
+def quantize(key: jax.Array, x: jax.Array, *, bits: int = 8, block_size: int = 1024) -> dict:
+    """Stochastic-quantize any-shaped ``x`` into {codes:int8, scale:f32} payload."""
+    assert block_size % 128 == 0
+    seed = jax.random.bits(key, (1,), dtype=jnp.uint32)
+    blocks = _to_blocks(x, block_size)
+    codes, scale = _q.quantize_2d(blocks, seed, bits=bits, interpret=_interpret())
+    return {"codes": codes, "scale": scale}
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "shape", "dtype"))
+def dequantize(payload: dict, *, bits: int = 8, shape: tuple = (), dtype: Any = jnp.float32) -> jax.Array:
+    out = _q.dequantize_2d(payload["codes"], payload["scale"], bits=bits, interpret=_interpret())
+    n = int(np.prod(shape)) if shape else 1
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: fused per-block max-abs scaling + stochastic int8 quantization.
+
+This is the compute hot-spot the paper's technique adds to the training step: every
+gossip round quantizes the full model-delta (up to tens of GB across the node).  The
+kernel fuses, in one VMEM pass over the tensor:
+
+    scale = max|block| -> normalize -> stochastic round -> int8 codes
+
+so the fp32 tensor is read from HBM exactly once and only int8 codes + per-block
+scales are written back (a ~3.8x HBM-write reduction vs. the unfused jnp path,
+which materializes the normalized fp32 tensor between ops).
+
+TPU adaptation notes (vs. a CUDA quantizer):
+* Blocks are *rows* of a (rows, block_size) view with block_size a multiple of 128
+  (lane width); row tiles are multiples of 8 (sublane) — MXU/VPU aligned.
+* Randomness is a counter-based PCG hash of (element index XOR seed) computed with
+  VPU integer ops — stateless, reproducible, identical in interpret mode on CPU
+  (``pltpu.prng_random_bits`` has no CPU lowering, and a counter-based generator
+  vectorizes better than threading PRNG state through the grid anyway).
+* The row-max reduction stays in VMEM registers; scales land in a (rows, 1) output.
+
+Validated against kernels/ref.py (pure jnp, same hash) in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pcg_hash(x: jax.Array) -> jax.Array:
+    """PCG-XSH-RR-style 32-bit mix; input/output uint32. Pure VPU integer ops."""
+    x = x.astype(jnp.uint32)
+    state = x * jnp.uint32(747796405) + jnp.uint32(2891336453)
+    word = ((state >> ((state >> jnp.uint32(28)) + jnp.uint32(4))) ^ state) * jnp.uint32(277803737)
+    return (word >> jnp.uint32(22)) ^ word
+
+
+def uniform_from_hash(idx: jax.Array, seed: jax.Array) -> jax.Array:
+    """Deterministic U[0,1) from a per-element counter and a scalar seed."""
+    bits = pcg_hash(idx ^ seed.astype(jnp.uint32))
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _quant_kernel(seed_ref, x_ref, codes_ref, scale_ref, *, levels: int, block_rows: int, cols: int):
+    pid = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    v = x * (jnp.float32(levels) / safe)
+
+    rows = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0) + (pid * block_rows).astype(jnp.uint32)
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    idx = rows * jnp.uint32(cols) + lanes
+    u = uniform_from_hash(idx, seed_ref[0])
+
+    floor = jnp.floor(v)
+    q = floor + (u < (v - floor)).astype(jnp.float32)
+    codes_ref[...] = jnp.clip(q, -levels, levels).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _dequant_kernel(codes_ref, scale_ref, out_ref, *, levels: int):
+    q = codes_ref[...].astype(jnp.float32)
+    out_ref[...] = q * (scale_ref[...] * jnp.float32(1.0 / levels))
+
+
+def _pick_block_rows(rows: int, cols: int, vmem_budget: int = 4 << 20) -> int:
+    bm = max(8, vmem_budget // (4 * cols))
+    bm = min(bm, rows)
+    # round to a multiple of 8 (f32 sublane) without exceeding rows
+    return max(8, (bm // 8) * 8) if rows >= 8 else rows
+
+
+def quantize_2d(x: jax.Array, seed: jax.Array, *, bits: int, interpret: bool = False):
+    """Quantize a (rows, cols) f32 array, one scale per row. cols % 128 == 0."""
+    rows, cols = x.shape
+    assert cols % 128 == 0, f"block_size must be a multiple of 128, got {cols}"
+    levels = 2 ** (bits - 1) - 1
+    bm = _pick_block_rows(rows, cols)
+    pad = (-rows) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = ((rows + pad) // bm,)
+    kernel = functools.partial(_quant_kernel, levels=levels, block_rows=bm, cols=cols)
+    codes, scale = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # scalar seed, broadcast to all programs
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows + pad, cols), jnp.int8),
+            jax.ShapeDtypeStruct((rows + pad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.uint32), x.astype(jnp.float32))
+    if pad:
+        codes, scale = codes[:rows], scale[:rows]
+    return codes, scale
+
+
+def dequantize_2d(codes: jax.Array, scale: jax.Array, *, bits: int, interpret: bool = False) -> jax.Array:
+    rows, cols = codes.shape
+    levels = 2 ** (bits - 1) - 1
+    bm = _pick_block_rows(rows, cols)
+    pad = (-rows) % bm
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad), (0, 0)))
+    grid = ((rows + pad) // bm,)
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
+        interpret=interpret,
+    )(codes, scale.astype(jnp.float32))
+    return out[:rows] if pad else out

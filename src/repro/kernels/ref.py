@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact where deterministic).
+
+``quantize_2d_ref`` replicates quant.py exactly — including the counter-based PCG
+stochastic rounding — so kernel tests can assert exact equality of codes, not just
+statistical agreement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import pcg_hash, uniform_from_hash
+
+
+def quantize_2d_ref(x: jax.Array, seed: jax.Array, *, bits: int):
+    rows, cols = x.shape
+    levels = 2 ** (bits - 1) - 1
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    v = x * (levels / safe)
+    idx = (
+        jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0) * jnp.uint32(cols)
+        + jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    )
+    u = uniform_from_hash(idx, jnp.asarray(seed).reshape(()).astype(jnp.uint32))
+    floor = jnp.floor(v)
+    q = floor + (u < (v - floor)).astype(jnp.float32)
+    codes = jnp.clip(q, -levels, levels).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_2d_ref(codes: jax.Array, scale: jax.Array, *, bits: int) -> jax.Array:
+    levels = 2 ** (bits - 1) - 1
+    return codes.astype(jnp.float32) * (scale.astype(jnp.float32) / levels)

@@ -1,0 +1,262 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production mesh.
+
+MUST be imported/run as a script entry: the XLA_FLAGS lines below must execute
+before jax initializes its backends (device count locks on first init).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + \
+    os.environ.get("XLA_FLAGS", "")
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.decentralized import (
+    WireCodec,
+    init_dist_state,
+    make_dist_train_step,
+)
+from repro.distributed.plans import SERVE_PLANS, TRAIN_PLANS
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    params_shardings,
+    replicated,
+)
+from repro.launch import analysis
+from repro.launch.mesh import derive_serve_mesh, derive_train_mesh, make_production_mesh
+from repro.launch.specs import (
+    SHAPES,
+    decode_cache_specs,
+    params_specs,
+    prefill_input_specs,
+    train_input_specs,
+)
+from repro.models.api import build_model
+from repro.optim import sgd
+from repro.optim.schedules import constant
+
+
+def _tree_size(tree) -> int:
+    return sum(int(l.size) for l in jax.tree.leaves(tree))
+
+
+def _nonembed_params(cfg, p_sds) -> int:
+    flat = jax.tree_util.tree_flatten_with_path(p_sds)[0]
+    total = 0
+    for path, leaf in flat:
+        name = "/".join(str(getattr(x, "key", getattr(x, "idx", x))) for x in path)
+        if "embed" in name or "lm_head" in name:
+            continue
+        total += int(leaf.size)
+    return total
+
+
+def _state_shardings(state_sds, mesh, n_routed):
+    """Shardings for the full DistState: param-like trees stacked over node."""
+    def shard_tree(tree):
+        return params_shardings(tree, mesh, node_axis=True, n_routed=n_routed) \
+            if tree is not None else None
+
+    from repro.distributed.decentralized import DistState
+    from repro.optim.optimizers import OptState
+    return DistState(
+        params=shard_tree(state_sds.params),
+        opt=OptState(step=replicated(mesh),
+                     m=shard_tree(state_sds.opt.m),
+                     v=shard_tree(state_sds.opt.v)),
+        aux={k: shard_tree(v) for k, v in state_sds.aux.items()},
+        step=replicated(mesh),
+    )
+
+
+def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dcd",
+                 bits: int = 8, momentum: float = 0.0,
+                 topology: str = "ring") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    plan = TRAIN_PLANS[arch]
+    n = plan.nodes_for(multi_pod)
+    prod = make_production_mesh(multi_pod=multi_pod)
+    mesh = derive_train_mesh(prod, n, plan.tp)
+    n_chips = int(prod.devices.size)
+
+    model = build_model(cfg)
+    opt = sgd(momentum=momentum)
+    codec = WireCodec(bits=bits) if algo in ("naive", "dcd", "ecd") else None
+    loss_fn = lambda p, b: model.loss(p, b, remat=plan.remat)
+    step = make_dist_train_step(loss_fn, algo, opt, codec, n, constant(1e-2),
+                                topology=topology)
+
+    import jax.numpy as _jnp
+    aux_dtype = _jnp.bfloat16 if plan.aux_dtype == "bfloat16" else None
+    p_sds = params_specs(cfg)
+    state_sds = jax.eval_shape(
+        lambda ps: init_dist_state(algo, ps, n, opt, aux_dtype=aux_dtype,
+                                   topology=topology), p_sds)
+    batch_sds = train_input_specs(cfg, shape, n)
+
+    n_routed = cfg.moe.n_routed if cfg.moe else None
+    state_sh = _state_shardings(state_sds, mesh, n_routed)
+    batch_sh = batch_shardings(batch_sds, mesh, node_axis=True)
+
+    with mesh:
+        t0 = time.time()
+        lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                          out_shardings=(state_sh, None)).lower(state_sds, batch_sds)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    print(compiled.memory_analysis())   # proves it fits
+    print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+    n_total = _tree_size(p_sds)
+    n_active = analysis.active_param_count(cfg, _nonembed_params(cfg, p_sds))
+    jx_flops = analysis.count_fn_flops(step, state_sds, batch_sds)
+    roof = analysis.analyze(
+        compiled, model_flops_global=analysis.model_flops(cfg, shape, n_active),
+        n_chips=n_chips, jaxpr_flops_global=jx_flops,
+        pod_size=256 if multi_pod else None)
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": "train", "algo": algo, "bits": bits,
+        "topology": topology, "multi_pod": multi_pod, "n_nodes": n, "n_chips": n_chips,
+        "params_total": n_total,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        **roof.as_dict(),
+    }
+    return rec
+
+
+def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    plan = SERVE_PLANS[arch]
+    prod = make_production_mesh(multi_pod=multi_pod)
+    mesh = derive_serve_mesh(prod, plan.mp)
+    n_chips = int(prod.devices.size)
+    model = build_model(cfg)
+
+    # serving weights are bf16 (fp32 masters live with the trainer), and are
+    # sharded over dp only when the bf16 shards would not fit per chip
+    p_sds = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16),
+                         params_specs(cfg))
+    param_bytes = sum(2 * l.size for l in jax.tree.leaves(p_sds))
+    dp_shard_weights = (param_bytes / plan.mp) > 8e9
+    n_routed = cfg.moe.n_routed if cfg.moe else None
+    p_sh = params_shardings(p_sds, mesh, node_axis=False, n_routed=n_routed,
+                            use_fsdp=dp_shard_weights)
+
+    if shape.kind == "prefill":
+        batch_sds = prefill_input_specs(cfg, shape)
+        b_sh = batch_shardings(batch_sds, mesh, node_axis=False)
+        fn = lambda params, batch: model.prefill(params, batch)
+        args = (p_sds, batch_sds)
+        with mesh:
+            t0 = time.time()
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+    else:
+        cache_sds, tok_sds = decode_cache_specs(cfg, shape)
+        c_sh = cache_shardings(cache_sds, mesh, batch=shape.global_batch)
+        t_sh = batch_shardings(tok_sds, mesh, node_axis=False)
+        fn = lambda params, caches, tokens: model.decode_step(params, caches, tokens)
+        args = (p_sds, cache_sds, tok_sds)
+        with mesh:
+            t0 = time.time()
+            lowered = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                              out_shardings=(None, c_sh)).lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+
+    print(compiled.memory_analysis())   # proves it fits
+    print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+    n_total = _tree_size(p_sds)
+    n_active = analysis.active_param_count(cfg, _nonembed_params(cfg, p_sds))
+    jx_flops = analysis.count_fn_flops(fn, *args)
+    roof = analysis.analyze(
+        compiled, model_flops_global=analysis.model_flops(cfg, shape, n_active),
+        n_chips=n_chips, jaxpr_flops_global=jx_flops,
+        pod_size=256 if multi_pod else None)
+    mem = compiled.memory_analysis()
+    return {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "multi_pod": multi_pod, "mp": plan.mp, "n_chips": n_chips,
+        "params_total": n_total,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        **roof.as_dict(),
+    }
+
+
+def dryrun(arch: str, shape_name: str, *, multi_pod: bool = False, algo: str = "dcd",
+           bits: int = 8, topology: str = "ring") -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return dryrun_train(arch, shape_name, multi_pod=multi_pod, algo=algo,
+                            bits=bits, topology=topology)
+    return dryrun_serve(arch, shape_name, multi_pod=multi_pod)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, action="append")
+    ap.add_argument("--shape", choices=list(SHAPES), action="append")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--algo", default="dcd",
+                    choices=["cpsgd", "dpsgd", "naive", "dcd", "ecd"])
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--topology", default="ring", choices=["ring", "torus"])
+    ap.add_argument("--json", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = args.arch or list(ARCH_IDS)
+    shapes = args.shape or list(SHAPES)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            key = f"{arch} x {shape} ({'2-pod 512' if args.multi_pod else '1-pod 256'})"
+            try:
+                rec = dryrun(arch, shape, multi_pod=args.multi_pod,
+                             algo=args.algo, bits=args.bits,
+                             topology=args.topology)
+                print(f"[OK] {key}: bottleneck={rec['bottleneck']} "
+                      f"t=({rec['t_compute_s']:.2e},{rec['t_memory_s']:.2e},"
+                      f"{rec['t_collective_s']:.2e})s "
+                      f"args={rec['memory']['argument_bytes']/2**30:.2f}GiB "
+                      f"compile={rec['compile_s']}s", flush=True)
+                if args.json:
+                    with open(args.json, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+            except Exception as e:
+                failures.append(key)
+                print(f"[FAIL] {key}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-runs failed: {failures}")
+    print("ALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

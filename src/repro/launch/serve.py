@@ -1,0 +1,79 @@
+"""Serving driver: batched request loop over the decode path.
+
+A production serving launcher in miniature: request queue -> batch assembly ->
+prefill (via decode path at CPU scale) -> decode until EOS/max-tokens -> detach
+finished rows.  The dry-run shapes (decode_32k, long_500k) lower this module's
+``decode_step`` under the (dp, mp) serve mesh; here it runs at reduced scale.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --requests 6
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.api import build_model
+
+
+def serve_batch(model, params, prompts: jax.Array, max_new: int, key,
+                window: Optional[int] = None, eos: int = 1):
+    B, P = prompts.shape
+    caches = model.init_cache(B, P + max_new, window=window)
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(P):
+        logits, caches = step(params, caches, prompts[:, t : t + 1])
+    done = jnp.zeros((B,), bool)
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = []
+    for _ in range(max_new):
+        out.append(jnp.where(done[:, None], eos, cur))
+        done = done | (cur[:, 0] == eos)
+        key, sub = jax.random.split(key)
+        logits, caches = step(params, caches, cur)
+        cur = jax.random.categorical(sub, logits[:, 0] / 0.8)[:, None].astype(jnp.int32)
+        if bool(done.all()):
+            break
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--window", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(1)
+
+    pending = [jax.random.randint(jax.random.fold_in(key, i),
+                                  (args.prompt_len,), 2, cfg.vocab)
+               for i in range(args.requests)]
+    t0 = time.time()
+    served = 0
+    while pending:
+        batch = pending[: args.batch]
+        pending = pending[args.batch :]
+        prompts = jnp.stack(batch)
+        out = serve_batch(model, params, prompts, args.max_new, key,
+                          window=args.window)
+        served += len(batch)
+        print(f"served batch of {len(batch)}: out shape {out.shape}")
+    dt = time.time() - t0
+    print(f"{served} requests in {dt:.1f}s "
+          f"({served * (args.prompt_len + args.max_new) / dt:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins for the dry-run.
+
+No device memory is ever allocated here — everything is a ShapeDtypeStruct,
+weak-type-correct and shardable (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm as lm_lib
+from repro.models.api import build_model
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str               # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    windowed: bool = False  # long-context decode: sliding-window ring cache
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k":   InputShape("long_500k", "decode", 524_288, 1, windowed=True),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ArchConfig, shape: InputShape, n_nodes: int) -> Dict[str, Any]:
+    """Stacked per-node training batch: leaves (n_nodes, per_node_batch, ...)."""
+    assert shape.global_batch % n_nodes == 0
+    b = shape.global_batch // n_nodes
+    n_front = cfg.frontend.n_tokens if cfg.frontend else 0
+    s_text = shape.seq_len - n_front if (cfg.frontend and cfg.frontend.kind == "vision") \
+        else shape.seq_len
+    specs = {
+        "tokens": _sds((n_nodes, b, s_text), jnp.int32),
+        "labels": _sds((n_nodes, b, s_text), jnp.int32),
+    }
+    if cfg.frontend:
+        specs["extra_embeds"] = _sds(
+            (n_nodes, b, cfg.frontend.n_tokens, cfg.frontend.dim), jnp.float32)
+    return specs
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    b = shape.global_batch
+    n_front = cfg.frontend.n_tokens if cfg.frontend else 0
+    s_text = shape.seq_len - n_front if (cfg.frontend and cfg.frontend.kind == "vision") \
+        else shape.seq_len
+    specs = {"tokens": _sds((b, s_text), jnp.int32)}
+    if cfg.frontend:
+        specs["extra_embeds"] = _sds((b, cfg.frontend.n_tokens, cfg.frontend.dim),
+                                     jnp.float32)
+    return specs
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: InputShape) -> Tuple[Any, Any]:
+    """(cache specs, token spec) for one serve_step.
+
+    long_500k uses the sliding-window ring buffer (capacity = window) for every
+    attention cache — the sub-quadratic variant; SSM caches are O(1) regardless.
+    """
+    window = cfg.long_context_window if shape.windowed else None
+    capacity = window if window else shape.seq_len
+    model = build_model(cfg)
+    caches = jax.eval_shape(lambda: model.init_cache(shape.global_batch, capacity,
+                                                     window=window))
+    tokens = _sds((shape.global_batch, 1), jnp.int32)
+    return caches, tokens
+
+
+def params_specs(cfg: ArchConfig) -> Any:
+    """Abstract parameter tree (no allocation) via eval_shape."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def stacked_params_specs(cfg: ArchConfig, n_nodes: int) -> Any:
+    p = params_specs(cfg)
+    return jax.tree.map(lambda l: _sds((n_nodes,) + l.shape, l.dtype), p)

@@ -1,0 +1,112 @@
+"""End-to-end decentralized training driver.
+
+On this CPU container it runs the *same* stacked program as the production mesh
+(1 device => all node slices colocated, math identical); on a real cluster the
+node axis shards over the (pod x data) axes per the TrainPlan.  Used by
+examples/train_lm.py for the ~100M-model few-hundred-step runs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.data import DataConfig, stacked_node_batches
+from repro.distributed.decentralized import (
+    DistState,
+    WireCodec,
+    init_dist_state,
+    make_dist_train_step,
+)
+from repro.models.api import build_model
+from repro.optim import make_optimizer
+from repro.optim.schedules import linear_warmup_cosine
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: Optional[str] = None          # assigned arch id, or None for custom cfg
+    algo: str = "dcd"                   # cpsgd | dpsgd | naive | dcd | ecd
+    bits: int = 8
+    n_nodes: int = 8
+    seq_len: int = 256
+    global_batch: int = 32
+    steps: int = 300
+    lr: float = 3e-3
+    warmup: int = 20
+    optimizer: str = "adamw"
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    log_every: int = 10
+    reduced: bool = True                # use the reduced config (CPU-scale)
+
+
+def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
+    model = build_model(cfg)
+    opt = make_optimizer(tc.optimizer, **({"weight_decay": 0.01} if tc.optimizer == "adamw" else {}))
+    codec = WireCodec(bits=tc.bits) if tc.algo in ("naive", "dcd", "ecd") else None
+    sched = linear_warmup_cosine(tc.lr, tc.warmup, tc.steps)
+    loss_fn = lambda p, b: model.loss(p, b)
+    step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, codec, tc.n_nodes, sched))
+
+    params0 = model.init(jax.random.key(tc.seed))
+    state = init_dist_state(tc.algo, params0, tc.n_nodes, opt)
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len, global_batch=tc.global_batch,
+                    n_shards=tc.n_nodes, seed=tc.seed)
+    start = 0
+    if tc.ckpt_dir and (s := latest_step(tc.ckpt_dir)) is not None:
+        state, manifest = restore(tc.ckpt_dir, state, s)
+        start = manifest["step"]
+        print(f"resumed from step {start}")
+
+    hist = {"step": [], "loss": [], "consensus": []}
+    t0 = time.time()
+    for t in range(start, tc.steps):
+        batch = stacked_node_batches(dc, t, cfg)
+        state, metrics = step_fn(state, batch)
+        if (t + 1) % tc.log_every == 0 or t == tc.steps - 1:
+            hist["step"].append(t + 1)
+            hist["loss"].append(float(metrics["loss"]))
+            hist["consensus"].append(float(metrics["consensus"]))
+            print(f"step {t+1:5d} loss={metrics['loss']:.4f} "
+                  f"consensus={metrics['consensus']:.3e} lr={metrics['lr']:.2e}",
+                  flush=True)
+        if tc.ckpt_dir and (t + 1) % tc.ckpt_every == 0:
+            save(tc.ckpt_dir, t + 1, state, metadata={"loss": float(metrics["loss"])})
+    hist["wall_s"] = time.time() - t0
+    hist["final_loss"] = hist["loss"][-1]
+    return hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    for f in dataclasses.fields(TrainConfig):
+        if f.type in ("int", int):
+            ap.add_argument(f"--{f.name.replace('_','-')}", type=int, default=f.default)
+        elif f.type in ("float", float):
+            ap.add_argument(f"--{f.name.replace('_','-')}", type=float, default=f.default)
+        elif f.type in ("bool", bool):
+            ap.add_argument(f"--{f.name.replace('_','-')}", action="store_true", default=f.default)
+        else:
+            ap.add_argument(f"--{f.name.replace('_','-')}", default=f.default)
+    args = ap.parse_args()
+    tc = TrainConfig(**{f.name: getattr(args, f.name) for f in dataclasses.fields(TrainConfig)})
+    cfg = get_config(tc.arch) if tc.arch else get_config("granite-3-2b")
+    if tc.reduced:
+        cfg = cfg.reduced()
+    hist = run_training(cfg, tc)
+    print(json.dumps({k: v for k, v in hist.items() if not isinstance(v, list)}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

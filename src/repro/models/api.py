@@ -1,0 +1,93 @@
+"""Public model API: build any assigned architecture behind one interface."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as ed
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., Any]               # (params, batch, remat=False) -> (loss, metrics)
+    logits: Callable[..., Any]             # (params, batch) -> logits (LM-only convenience)
+    prefill: Callable[..., Any]            # (params, batch) -> last-position logits (B, V)
+    init_cache: Callable[..., Any]         # (B, capacity, window=None) -> caches
+    decode_step: Callable[..., Any]        # (params, caches, tokens) -> (logits, caches)
+
+    def param_count(self, params) -> int:
+        return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encdec:
+        return Model(
+            cfg=cfg,
+            init=lambda key: ed.encdec_init(cfg, key),
+            loss=lambda params, batch, remat=False: ed.encdec_loss(cfg, params, batch, remat),
+            logits=lambda params, batch: _encdec_logits(cfg, params, batch),
+            prefill=lambda params, batch: _encdec_logits(cfg, params, batch, last_only=True),
+            init_cache=lambda B, capacity, window=None: ed.encdec_init_cache(cfg, B, capacity, window),
+            decode_step=lambda params, caches, tokens: ed.encdec_decode_step(cfg, params, caches, tokens),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: lm.lm_init(cfg, key),
+        loss=lambda params, batch, remat=False: lm.lm_loss(cfg, params, batch, remat),
+        logits=lambda params, batch: lm.lm_logits(cfg, params, batch["tokens"],
+                                                  batch.get("extra_embeds")),
+        prefill=lambda params, batch: _lm_prefill(cfg, params, batch),
+        init_cache=lambda B, capacity, window=None: lm.lm_init_cache(cfg, B, capacity, window),
+        decode_step=lambda params, caches, tokens: lm.lm_decode_step(cfg, params, caches, tokens),
+    )
+
+
+def _lm_prefill(cfg, params, batch):
+    """Serving prefill: full forward, logits only at the final position (the full
+    (B, S, V) logits tensor is never materialized in a serving prefill)."""
+    from repro.models.layers import dense
+    h, _ = lm.lm_hidden(cfg, params, batch["tokens"], batch.get("extra_embeds"))
+    return dense(h[:, -1:], params["lm_head"])[..., : cfg.vocab]
+
+
+def _encdec_logits(cfg, params, batch, last_only: bool = False):
+    enc_out = ed.encode(cfg, params, batch["extra_embeds"])
+    h = ed._decoder(cfg, params, batch["tokens"], enc_out)
+    from repro.models.layers import dense
+    if last_only:
+        h = h[:, -1:]
+    return dense(h, params["lm_head"])[..., : cfg.vocab]
+
+
+def make_batch_specs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one *training* batch (see launch.dryrun)."""
+    n_front = cfg.frontend.n_tokens if cfg.frontend else 0
+    s_text = seq - n_front if cfg.frontend and cfg.frontend.kind == "vision" else seq
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+    }
+    if cfg.frontend:
+        specs["extra_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend.n_tokens, cfg.frontend.dim), jnp.float32)
+    return specs
+
+
+def make_batch(cfg: ArchConfig, key: jax.Array, batch: int, seq: int) -> Dict[str, jax.Array]:
+    """Concrete synthetic batch matching make_batch_specs (for smoke tests)."""
+    specs = make_batch_specs(cfg, batch, seq)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, specs["tokens"].shape, 0, cfg.vocab),
+        "labels": jax.random.randint(k2, specs["labels"].shape, 0, cfg.vocab),
+    }
+    if "extra_embeds" in specs:
+        out["extra_embeds"] = jax.random.normal(k3, specs["extra_embeds"].shape)
+    return out

@@ -1,0 +1,194 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The mel-spectrogram + conv feature extractor is the allowed STUB: the model
+consumes precomputed encoder frames ``(B, n_frames, d)`` from ``input_specs``.
+Encoder: bidirectional self-attention, LN+GeLU, sinusoidal positions.
+Decoder: causal self-attention + cross-attention to the encoder output.
+Decode caches: per-layer self-attn KV cache + cross K/V computed once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    Params,
+    chunked_softmax_xent,
+    dense,
+    dense_init,
+    embed,
+    embed_init,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    sinusoidal_positions,
+)
+
+
+class CrossCache(NamedTuple):
+    k: jax.Array   # (B, T_enc, H, D) — precomputed from encoder output
+    v: jax.Array
+
+
+def _enc_layer_init(cfg: ArchConfig, key) -> Params:
+    ka, kf = jax.random.split(key)
+    return {"ln1": layernorm_init(cfg.d_model),
+            "attn": attn.gqa_init(ka, cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.hd),
+            "ln2": layernorm_init(cfg.d_model),
+            "mlp": gelu_mlp_init(kf, cfg.d_model, cfg.d_ff)}
+
+
+def _dec_layer_init(cfg: ArchConfig, key) -> Params:
+    ka, kc, kf = jax.random.split(key, 3)
+    return {"ln1": layernorm_init(cfg.d_model),
+            "self": attn.gqa_init(ka, cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.hd),
+            "ln2": layernorm_init(cfg.d_model),
+            "cross": attn.cross_init(kc, cfg.d_model, cfg.n_heads, cfg.hd),
+            "ln3": layernorm_init(cfg.d_model),
+            "mlp": gelu_mlp_init(kf, cfg.d_model, cfg.d_ff)}
+
+
+def encdec_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.encoder_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": embed_init(k3, cfg.vocab_padded, cfg.d_model),
+        "enc": jax.vmap(lambda k: _enc_layer_init(cfg, k))(enc_keys),
+        "dec": jax.vmap(lambda k: _dec_layer_init(cfg, k))(dec_keys),
+        "enc_ln": layernorm_init(cfg.d_model),
+        "final_ln": layernorm_init(cfg.d_model),
+        "lm_head": dense_init(k4, cfg.d_model, cfg.vocab_padded, scale=0.02),
+    }
+
+
+def encode(cfg: ArchConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames (B, T, d) -> encoder hidden (B, T, d)."""
+    T = frames.shape[1]
+    h = frames.astype(COMPUTE_DTYPE) + sinusoidal_positions(T, cfg.d_model).astype(COMPUTE_DTYPE)
+
+    def body(hh, lp):
+        # bidirectional self-attention: no mask, no rope (sinusoid already added)
+        x = layernorm(hh, lp["ln1"])
+        B, S, _ = x.shape
+        q = dense(x, lp["attn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+        k = dense(x, lp["attn"]["wk"]).reshape(B, S, cfg.n_heads, cfg.hd)
+        v = dense(x, lp["attn"]["wv"]).reshape(B, S, cfg.n_heads, cfg.hd)
+        o = attn._sdpa(q, k, v, jnp.ones((S, S), bool))
+        hh = hh + dense(o.reshape(B, S, -1), lp["attn"]["wo"])
+        hh = hh + gelu_mlp(layernorm(hh, lp["ln2"]), lp["mlp"])
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, params["enc"])
+    return layernorm(h, params["enc_ln"])
+
+
+def _decoder(cfg: ArchConfig, params: Params, tokens: jax.Array, enc_out: jax.Array):
+    S = tokens.shape[1]
+    h = embed(tokens, params["embed"]) + sinusoidal_positions(S, cfg.d_model).astype(COMPUTE_DTYPE)
+
+    def body(hh, lp):
+        x = layernorm(hh, lp["ln1"])
+        B = x.shape[0]
+        q = dense(x, lp["self"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+        k = dense(x, lp["self"]["wk"]).reshape(B, S, cfg.n_heads, cfg.hd)
+        v = dense(x, lp["self"]["wv"]).reshape(B, S, cfg.n_heads, cfg.hd)
+        o = attn._sdpa(q, k, v, attn.causal_mask(S))
+        hh = hh + dense(o.reshape(B, S, -1), lp["self"]["wo"])
+        hh = hh + attn.cross_forward(layernorm(hh, lp["ln2"]), enc_out, lp["cross"],
+                                     n_heads=cfg.n_heads, head_dim=cfg.hd)
+        hh = hh + gelu_mlp(layernorm(hh, lp["ln3"]), lp["mlp"])
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, params["dec"])
+    return layernorm(h, params["final_ln"])
+
+
+def encdec_loss(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+                remat: bool = False):
+    enc_out = encode(cfg, params, batch["extra_embeds"])
+    h = _decoder(cfg, params, batch["tokens"], enc_out)
+    xent = chunked_softmax_xent(h, params["lm_head"], batch["labels"],
+                                batch.get("loss_mask"))
+    return xent, {"xent": xent, "lb_loss": jnp.float32(0), "z_loss": jnp.float32(0)}
+
+
+# ----------------------------------------------------------------- decode
+
+def encdec_init_cache(cfg: ArchConfig, B: int, capacity: int,
+                      window: Optional[int] = None) -> Any:
+    self_c = attn.gqa_init_cache(B, capacity, cfg.n_heads, cfg.hd, window=window)
+    cross_c = CrossCache(
+        k=jnp.zeros((B, cfg.frontend.n_tokens, cfg.n_heads, cfg.hd), COMPUTE_DTYPE),
+        v=jnp.zeros((B, cfg.frontend.n_tokens, cfg.n_heads, cfg.hd), COMPUTE_DTYPE),
+    )
+    L = cfg.n_layers
+    return {
+        "self": jax.tree.map(lambda l: jnp.zeros((L,) + l.shape, l.dtype), self_c),
+        "cross": jax.tree.map(lambda l: jnp.zeros((L,) + l.shape, l.dtype), cross_c),
+    }
+
+
+def encdec_prefill_cross(cfg: ArchConfig, params: Params, frames: jax.Array, caches):
+    """Run the encoder once and populate per-layer cross K/V caches."""
+    enc_out = encode(cfg, params, frames)
+
+    def per_layer(lp):
+        B, T, _ = enc_out.shape
+        k = dense(enc_out, lp["cross"]["wk"]).reshape(B, T, cfg.n_heads, cfg.hd)
+        v = dense(enc_out, lp["cross"]["wv"]).reshape(B, T, cfg.n_heads, cfg.hd)
+        return CrossCache(k=k.astype(COMPUTE_DTYPE), v=v.astype(COMPUTE_DTYPE))
+
+    cross = jax.vmap(per_layer)(params["dec"])
+    return {**caches, "cross": cross}
+
+
+def encdec_decode_step(cfg: ArchConfig, params: Params, caches, tokens: jax.Array):
+    """tokens (B,1) -> logits (B,1,V).  Uses cached cross K/V (encoder already run)."""
+    t = caches["self"].pos[0] if caches["self"].pos.ndim else caches["self"].pos
+    x = embed(tokens, params["embed"])
+    x = x + sinusoidal_positions_at(t, cfg.d_model).astype(COMPUTE_DTYPE)
+
+    def body(xx, pc):
+        lp, sc, cc = pc
+        B = xx.shape[0]
+        q = dense(layernorm(xx, lp["ln1"]), lp["self"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        kn = dense(layernorm(xx, lp["ln1"]), lp["self"]["wk"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        vn = dense(layernorm(xx, lp["ln1"]), lp["self"]["wv"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        tt = sc.pos
+        cap = sc.k.shape[1]
+        slot = (tt % cap) if sc.window else jnp.minimum(tt, cap - 1)
+        k = jax.lax.dynamic_update_slice(sc.k, kn.astype(sc.k.dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(sc.v, vn.astype(sc.v.dtype), (0, slot, 0, 0))
+        j = jnp.arange(cap)
+        valid = (j <= jnp.minimum(tt, cap - 1)) if not sc.window else ((j <= tt) | (tt >= cap))
+        o = attn._sdpa(q, k, v, valid[None, None, :].repeat(B, 0))
+        xx = xx + dense(o.reshape(B, 1, -1), lp["self"]["wo"])
+        new_sc = attn.KVCache(k=k, v=v, pos=tt + 1, window=sc.window)
+        # cross-attention against cached K/V
+        xq = dense(layernorm(xx, lp["ln2"]), lp["cross"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        o2 = attn._sdpa(xq, cc.k, cc.v, jnp.ones((1, cc.k.shape[1]), bool))
+        xx = xx + dense(o2.reshape(B, 1, -1), lp["cross"]["wo"])
+        xx = xx + gelu_mlp(layernorm(xx, lp["ln3"]), lp["mlp"])
+        return xx, new_sc
+
+    x, new_self = jax.lax.scan(body, x, (params["dec"], caches["self"], caches["cross"]))
+    x = layernorm(x, params["final_ln"])
+    logits = dense(x, params["lm_head"])[..., : cfg.vocab]
+    return logits, {**caches, "self": new_self}
+
+
+def sinusoidal_positions_at(t: jax.Array, d: int) -> jax.Array:
+    """Single sinusoidal position row for a traced position t."""
+    import math
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(t.astype(jnp.float32) * div))
+    pe = pe.at[1::2].set(jnp.cos(t.astype(jnp.float32) * div))
+    return pe

@@ -1,0 +1,170 @@
+"""Shared neural building blocks (pure functions + param initializers, no flax)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# Compute dtype is bf16 (TPU native); params are kept fp32 (master copies).
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def shard_batch_hint(x: jax.Array) -> jax.Array:
+    """Pin (B, S, ...) activations to batch-sharded, TP-replicated layout.
+
+    Without this hint GSPMD sometimes un-shards the batch mid-model (observed:
+    full-batch activation all-reduces costing >10x the Megatron-expected traffic).
+    Axis names are resolved against whatever mesh is active at trace time —
+    "fsdp" on the train mesh, "dp" on the serve mesh; under the node-axis vmap the
+    trainer passes spmd_axis_name="node" so the constraint composes.  Outside any
+    mesh (CPU smoke tests) this is a no-op.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    for axis in ("fsdp", "dp"):
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, P(axis, *([None] * (x.ndim - 1))))
+        except Exception:
+            continue
+    return x
+
+
+def shard_hint(x: jax.Array, *spec) -> jax.Array:
+    """Best-effort with_sharding_constraint: no-op outside a mesh or when the
+    named axes don't exist (e.g. CPU smoke tests, serve mesh without 'fsdp')."""
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (scale * jax.random.normal(key, (d_in, d_out))).astype(jnp.float32)
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+
+
+def embed_init(key, vocab: int, d: int) -> jax.Array:
+    return (0.02 * jax.random.normal(key, (vocab, d))).astype(jnp.float32)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return table.astype(COMPUTE_DTYPE)[tokens]
+
+
+def rmsnorm_init(d: int) -> jax.Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * g).astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(x: jax.Array, p: Params, eps: float = 1e-5) -> jax.Array:
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mu) ** 2, axis=-1, keepdims=True)
+    return ((h - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLPs
+
+def swiglu_init(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d, d_ff),
+        "wg": dense_init(k2, d, d_ff),
+        "wo": dense_init(k3, d_ff, d),
+    }
+
+
+def swiglu(x: jax.Array, p: Params) -> jax.Array:
+    return dense(jax.nn.silu(dense(x, p["wg"])) * dense(x, p["wi"]), p["wo"])
+
+
+def gelu_mlp_init(key, d: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d, d_ff), "wo": dense_init(k2, d_ff, d)}
+
+
+def gelu_mlp(x: jax.Array, p: Params) -> jax.Array:
+    return dense(jax.nn.gelu(dense(x, p["wi"])), p["wo"])
+
+
+# ----------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                   # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ----------------------------------------------------------------- loss
+
+def chunked_softmax_xent(hidden: jax.Array, head_w: jax.Array, labels: jax.Array,
+                         mask: jax.Array | None = None, chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing the full (B, S, V) logits tensor.
+
+    Scans over sequence chunks so only (B, chunk, V) logits live at once — with
+    V up to 128k this is the difference between ~2 GB and ~0.1 GB of activations.
+    """
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else jnp.pad(
+            jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    n_chunks = hidden.shape[1] // chunk
+    h = hidden.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)       # (n, B, c, D)
+    y = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    m = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hc, yc, mc = xs
+        logits = dense(hc, head_w).astype(jnp.float32)             # (B, c, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (h, y, m))
+    return total / jnp.maximum(count, 1.0)

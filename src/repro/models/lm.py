@@ -1,0 +1,378 @@
+"""Decoder-only language models: dense / MoE / SSM / hybrid / VLM-backbone.
+
+Layers are *stacked* (leading axis = layer) and driven by ``jax.lax.scan`` so an
+88-layer model compiles as one layer's HLO — essential for the full-config
+multi-pod dry-runs.  Hybrid (Zamba2) uses a two-level scan: outer over periods,
+inner over the period's Mamba run, plus ONE shared attention block whose params are
+reused at every application (true parameter sharing; each application still owns a
+separate KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    shard_batch_hint,
+    Params,
+    chunked_softmax_xent,
+    dense,
+    dense_init,
+    embed,
+    embed_init,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+)
+
+
+def _norm_init(cfg: ArchConfig, d: int):
+    return rmsnorm_init(d) if cfg.norm == "rms" else layernorm_init(d)
+
+
+def _norm(cfg: ArchConfig, x, p):
+    return rmsnorm(x, p) if cfg.norm == "rms" else layernorm(x, p)
+
+
+def _mlp_init(cfg: ArchConfig, key, d: int, d_ff: int):
+    return swiglu_init(key, d, d_ff) if cfg.act == "swiglu" else gelu_mlp_init(key, d, d_ff)
+
+
+def _mlp(cfg: ArchConfig, x, p):
+    return swiglu(x, p) if cfg.act == "swiglu" else gelu_mlp(x, p)
+
+
+# ----------------------------------------------------------------- blocks
+
+def _attn_init(cfg: ArchConfig, key) -> Params:
+    if cfg.mla:
+        m = cfg.mla
+        return attn.mla_init(key, cfg.d_model, cfg.n_heads, kv_lora=m.kv_lora,
+                             qk_nope=m.qk_nope, qk_rope=m.qk_rope, v_head=m.v_head)
+    return attn.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+
+
+def _attn_fwd(cfg: ArchConfig, x, p) -> jax.Array:
+    if cfg.mla:
+        m = cfg.mla
+        return attn.mla_forward(x, p, n_heads=cfg.n_heads, kv_lora=m.kv_lora,
+                                qk_nope=m.qk_nope, qk_rope=m.qk_rope, v_head=m.v_head,
+                                theta=cfg.rope_theta)
+    return attn.gqa_forward(x, p, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                            head_dim=cfg.hd, theta=cfg.rope_theta)
+
+
+def _attn_decode(cfg: ArchConfig, x, cache, p):
+    if cfg.mla:
+        m = cfg.mla
+        return attn.mla_decode(x, cache, p, n_heads=cfg.n_heads, kv_lora=m.kv_lora,
+                               qk_nope=m.qk_nope, qk_rope=m.qk_rope, v_head=m.v_head,
+                               theta=cfg.rope_theta)
+    return attn.gqa_decode(x, cache, p, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                           head_dim=cfg.hd, theta=cfg.rope_theta)
+
+
+def _attn_cache(cfg: ArchConfig, B: int, capacity: int, window: Optional[int]):
+    if cfg.mla:
+        m = cfg.mla
+        return attn.mla_init_cache(B, capacity, m.kv_lora, m.qk_rope)
+    return attn.gqa_init_cache(B, capacity, cfg.n_kv_heads, cfg.hd, window=window)
+
+
+def _block_init(cfg: ArchConfig, key, kind: str) -> Params:
+    """kind: 'attn_dense' | 'attn_moe' | 'ssm'."""
+    d = cfg.d_model
+    if kind == "ssm":
+        return {"ln": _norm_init(cfg, d),
+                "mixer": ssm_lib.ssm_init(key, d, d_inner=cfg.ssm.d_inner,
+                                          d_state=cfg.ssm.d_state, n_heads=cfg.ssm.n_heads,
+                                          n_groups=cfg.ssm.n_groups)}
+    ka, kf = jax.random.split(key)
+    p = {"ln1": _norm_init(cfg, d), "attn": _attn_init(cfg, ka), "ln2": _norm_init(cfg, d)}
+    if kind == "attn_moe":
+        p["ffn"] = moe_lib.moe_init(kf, d, cfg.moe.d_expert, cfg.moe.n_routed, cfg.moe.n_shared)
+    else:
+        d_ff = cfg.moe.d_ff_dense if (cfg.moe and kind == "attn_dense_moe0") else cfg.d_ff
+        p["ffn"] = _mlp_init(cfg, kf, d, d_ff)
+    return p
+
+
+def _block_fwd(cfg: ArchConfig, h, p, kind: str) -> Tuple[jax.Array, Dict]:
+    aux = {"lb_loss": jnp.float32(0), "z_loss": jnp.float32(0)}
+    if kind == "ssm":
+        s = cfg.ssm
+        h = h + ssm_lib.mamba_forward(_norm(cfg, h, p["ln"]), p["mixer"],
+                                      d_inner=s.d_inner, d_state=s.d_state,
+                                      n_heads=s.n_heads, n_groups=s.n_groups, chunk=s.chunk)
+        return h, aux
+    h = h + _attn_fwd(cfg, _norm(cfg, h, p["ln1"]), p["attn"])
+    x = _norm(cfg, h, p["ln2"])
+    if kind == "attn_moe":
+        y, moe_aux = moe_lib.moe_forward(x, p["ffn"], n_routed=cfg.moe.n_routed,
+                                         n_shared=cfg.moe.n_shared, top_k=cfg.moe.top_k,
+                                         capacity_factor=cfg.moe.capacity_factor)
+        aux = moe_aux
+    else:
+        y = _mlp(cfg, x, p["ffn"])
+    return h + y, aux
+
+
+def _block_decode(cfg: ArchConfig, x, cache, p, kind: str):
+    if kind == "ssm":
+        s = cfg.ssm
+        y, cache = ssm_lib.mamba_decode(_norm(cfg, x, p["ln"]), cache, p["mixer"],
+                                        d_inner=s.d_inner, d_state=s.d_state,
+                                        n_heads=s.n_heads, n_groups=s.n_groups)
+        return x + y, cache
+    y, cache = _attn_decode(cfg, _norm(cfg, x, p["ln1"]), cache, p["attn"])
+    x = x + y
+    z = _norm(cfg, x, p["ln2"])
+    if kind == "attn_moe":
+        y, _ = moe_lib.moe_forward(z, p["ffn"], n_routed=cfg.moe.n_routed,
+                                   n_shared=cfg.moe.n_shared, top_k=cfg.moe.top_k,
+                                   capacity_factor=cfg.moe.capacity_factor)
+    else:
+        y = _mlp(cfg, z, p["ffn"])
+    return x + y, cache
+
+
+# ----------------------------------------------------------------- layer stacks
+
+def _layer_kind(cfg: ArchConfig) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.moe:
+        return "attn_moe"
+    return "attn_dense"
+
+
+def _stack_init(cfg: ArchConfig, key, kind: str, n: int) -> Params:
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(lambda k: _block_init(cfg, k, kind))(keys[:n]) if n else None
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridLayout:
+    n_periods: int        # full (period-1 mamba + shared attn) groups
+    per_period: int       # mamba layers per period
+    tail: int             # trailing mamba layers
+
+    @staticmethod
+    def of(cfg: ArchConfig) -> "HybridLayout":
+        per = cfg.hybrid_period - 1
+        n_p = cfg.n_layers // cfg.hybrid_period
+        tail = cfg.n_layers - n_p * cfg.hybrid_period
+        return HybridLayout(n_periods=n_p, per_period=per, tail=tail)
+
+
+def lm_init(cfg: ArchConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        # padded vocab => embeddings / LM head shard evenly under TP
+        "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model),
+        "final_ln": _norm_init(cfg, cfg.d_model),
+        "lm_head": dense_init(ks[1], cfg.d_model, cfg.vocab_padded, scale=0.02),
+    }
+    if cfg.frontend and cfg.frontend.kind == "vision":
+        kp1, kp2 = jax.random.split(ks[2])
+        p["proj"] = {"w1": dense_init(kp1, cfg.frontend.dim, cfg.d_model),
+                     "w2": dense_init(kp2, cfg.d_model, cfg.d_model)}
+    if cfg.hybrid_period:
+        lay = HybridLayout.of(cfg)
+        kper = jax.random.split(ks[3], max(lay.n_periods, 1))
+        p["pm"] = jax.vmap(lambda k: _stack_init(cfg, k, "ssm", lay.per_period))(kper)
+        if lay.tail:
+            p["tail"] = _stack_init(cfg, ks[4], "ssm", lay.tail)
+        ka, km = jax.random.split(ks[5])
+        p["shared_attn"] = {"ln1": _norm_init(cfg, cfg.d_model),
+                            "attn": attn.gqa_init(ka, cfg.d_model, cfg.n_heads,
+                                                  cfg.n_kv_heads, cfg.hd),
+                            "ln2": _norm_init(cfg, cfg.d_model),
+                            "mlp": _mlp_init(cfg, km, cfg.d_model, cfg.d_ff)}
+        return p
+    kind = _layer_kind(cfg)
+    if cfg.moe and cfg.moe.dense_layers:
+        n_dense = len(cfg.moe.dense_layers)
+        p["blocks0"] = _stack_init(cfg, ks[6], "attn_dense_moe0", n_dense)
+        p["blocks"] = _stack_init(cfg, ks[7], kind, cfg.n_layers - n_dense)
+    else:
+        p["blocks"] = _stack_init(cfg, ks[6], kind, cfg.n_layers)
+    return p
+
+
+def _cast_weights(lp: Params) -> Params:
+    """Cast a layer's big fp32 weights to bf16 at the top of the scan body.
+
+    With FSDP the cast then happens on the *sharded* leaf, so the per-layer
+    all-gather moves bf16 — half the wire/HBM bytes of gathering fp32 and
+    casting after (numerics unchanged: dense() casts at use anyway).  1-D
+    params (norm gains, SSM decay vectors) stay fp32.
+    """
+    return jax.tree.map(
+        lambda w: w.astype(COMPUTE_DTYPE)
+        if (w.ndim >= 2 and w.dtype == jnp.float32) else w, lp)
+
+
+def _scan_blocks(cfg: ArchConfig, h, stacked: Params, kind: str, remat: bool):
+    def body(carry, lp):
+        hh, lb, zl = carry
+        hh, aux = _block_fwd(cfg, hh, _cast_weights(lp), kind)
+        hh = shard_batch_hint(hh)
+        return (hh, lb + aux["lb_loss"], zl + aux["z_loss"]), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, lb, zl), _ = jax.lax.scan(body, (h, jnp.float32(0), jnp.float32(0)), stacked)
+    return h, lb, zl
+
+
+def lm_hidden(cfg: ArchConfig, params: Params, tokens: jax.Array,
+              extra_embeds: Optional[jax.Array] = None, remat: bool = False):
+    """Token ids (+ optional frontend embeddings, prepended) -> final hidden states."""
+    h = embed(tokens, params["embed"])
+    if extra_embeds is not None:
+        e = extra_embeds.astype(COMPUTE_DTYPE)
+        if "proj" in params:
+            e = dense(jax.nn.gelu(dense(e, params["proj"]["w1"])), params["proj"]["w2"])
+        h = jnp.concatenate([e, h], axis=1)
+    h = shard_batch_hint(h)
+    lb = zl = jnp.float32(0)
+    if cfg.hybrid_period:
+        lay = HybridLayout.of(cfg)
+
+        def period(carry, pp):
+            hh, l1, z1 = carry
+            hh, l2, z2 = _scan_blocks(cfg, hh, pp, "ssm", remat)
+            sa = _cast_weights(params["shared_attn"])
+            hh = hh + attn.gqa_forward(_norm(cfg, hh, sa["ln1"]), sa["attn"],
+                                       n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                       head_dim=cfg.hd, theta=cfg.rope_theta)
+            hh = hh + _mlp(cfg, _norm(cfg, hh, sa["ln2"]), sa["mlp"])
+            return (hh, l1 + l2, z1 + z2), None
+
+        (h, lb, zl), _ = jax.lax.scan(period, (h, lb, zl), params["pm"])
+        if lay.tail:
+            h, l2, z2 = _scan_blocks(cfg, h, params["tail"], "ssm", remat)
+            lb, zl = lb + l2, zl + z2
+    else:
+        kind = _layer_kind(cfg)
+        if "blocks0" in params:
+            def body0(carry, lp):
+                hh, aux = _block_fwd(cfg, carry, _cast_weights(lp), "attn_dense_moe0")
+                return hh, None
+            h, _ = jax.lax.scan(body0, h, params["blocks0"])
+        h, lb, zl = _scan_blocks(cfg, h, params["blocks"], kind, remat)
+    h = _norm(cfg, h, params["final_ln"])
+    return h, {"lb_loss": lb, "z_loss": zl}
+
+
+def lm_loss(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+            remat: bool = False):
+    """batch: tokens (B,S_text), labels (B,S_text), optional extra_embeds/loss_mask."""
+    h, aux = lm_hidden(cfg, params, batch["tokens"], batch.get("extra_embeds"), remat)
+    n_front = 0 if batch.get("extra_embeds") is None else batch["extra_embeds"].shape[1]
+    h_text = h[:, n_front:]
+    xent = chunked_softmax_xent(h_text, params["lm_head"], batch["labels"],
+                                batch.get("loss_mask"))
+    loss = xent + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+    return loss, {"xent": xent, **aux}
+
+
+def lm_logits(cfg: ArchConfig, params: Params, tokens: jax.Array,
+              extra_embeds: Optional[jax.Array] = None):
+    h, _ = lm_hidden(cfg, params, tokens, extra_embeds)
+    return dense(h, params["lm_head"])[..., : cfg.vocab]
+
+
+# ----------------------------------------------------------------- decode
+
+def lm_init_cache(cfg: ArchConfig, B: int, capacity: int,
+                  window: Optional[int] = None) -> Any:
+    """Stacked decode caches (leading axis = layer), ready for the scan driver."""
+    def attn_cache():
+        return _attn_cache(cfg, B, capacity, window)
+
+    def ssm_cache():
+        s = cfg.ssm
+        return ssm_lib.mamba_init_cache(B, d_inner=s.d_inner, d_state=s.d_state,
+                                        n_heads=s.n_heads, n_groups=s.n_groups)
+
+    if cfg.hybrid_period:
+        lay = HybridLayout.of(cfg)
+        caches = {
+            "pm": jax.tree.map(
+                lambda l: jnp.zeros((lay.n_periods, lay.per_period) + l.shape, l.dtype),
+                ssm_cache()),
+            "attn": jax.tree.map(
+                lambda l: jnp.zeros((lay.n_periods,) + l.shape, l.dtype), attn_cache()),
+        }
+        if lay.tail:
+            caches["tail"] = jax.tree.map(
+                lambda l: jnp.zeros((lay.tail,) + l.shape, l.dtype), ssm_cache())
+        return caches
+    make = ssm_cache if cfg.family == "ssm" else attn_cache
+    n_dense = len(cfg.moe.dense_layers) if (cfg.moe and cfg.moe.dense_layers) else 0
+    caches = {"blocks": jax.tree.map(
+        lambda l: jnp.zeros((cfg.n_layers - n_dense,) + l.shape, l.dtype), make())}
+    if n_dense:
+        caches["blocks0"] = jax.tree.map(
+            lambda l: jnp.zeros((n_dense,) + l.shape, l.dtype), make())
+    return caches
+
+
+def lm_decode_step(cfg: ArchConfig, params: Params, caches: Any, tokens: jax.Array):
+    """One decode step: tokens (B,1) -> logits (B,1,V), updated caches."""
+    x = embed(tokens, params["embed"])
+
+    def scan_dec(x, stacked_p, stacked_c, kind):
+        def body(xx, pc):
+            lp, lc = pc
+            xx, nc = _block_decode(cfg, xx, lc, lp, kind)
+            return xx, nc
+        return jax.lax.scan(body, x, (stacked_p, stacked_c))
+
+    if cfg.hybrid_period:
+        lay = HybridLayout.of(cfg)
+        sa = params["shared_attn"]
+
+        def period(xx, pc):
+            pp, pm_c, at_c = pc
+            xx, pm_new = scan_dec(xx, pp, pm_c, "ssm")
+            y, at_new = attn.gqa_decode(_norm(cfg, xx, sa["ln1"]), at_c, sa["attn"],
+                                        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                        head_dim=cfg.hd, theta=cfg.rope_theta)
+            xx = xx + y
+            xx = xx + _mlp(cfg, _norm(cfg, xx, sa["ln2"]), sa["mlp"])
+            return xx, (pm_new, at_new)
+
+        x, (pm_new, at_new) = jax.lax.scan(
+            period, x, (params["pm"], caches["pm"], caches["attn"]))
+        new_caches = {"pm": pm_new, "attn": at_new}
+        if lay.tail:
+            x, tail_new = scan_dec(x, params["tail"], caches["tail"], "ssm")
+            new_caches["tail"] = tail_new
+    else:
+        kind = _layer_kind(cfg)
+        new_caches = {}
+        if "blocks0" in params:
+            x, c0 = scan_dec(x, params["blocks0"], caches["blocks0"], "attn_dense_moe0")
+            new_caches["blocks0"] = c0
+        x, cs = scan_dec(x, params["blocks"], caches["blocks"], kind)
+        new_caches["blocks"] = cs
+    x = _norm(cfg, x, params["final_ln"])
+    logits = dense(x, params["lm_head"])[..., : cfg.vocab]
+    return logits, new_caches

@@ -1,0 +1,218 @@
+"""Mamba2 (SSD — state-space duality) mixer block [arXiv:2405.21060].
+
+Chunked SSD algorithm for train/prefill (sub-quadratic: O(S·N·P) with chunk-local
+"attention" + inter-chunk recurrence), constant-state recurrent step for decode.
+Tested against a naive O(S) sequential-recurrence oracle in tests/test_models.py.
+
+Layout: x (B, S, H, P) heads, A (H,) negative decay, B/C (B, S, G, N) groups
+broadcast over heads, dt (B, S, H) softplus-positive step sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense, dense_init
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array           # (B, H, P, N) state
+    conv: jax.Array        # (B, K-1, Dconv) conv tail
+    pos: jax.Array
+
+
+def ssm_init(key, d: int, *, d_inner: int, d_state: int, n_heads: int,
+             n_groups: int = 1, d_conv: int = 4) -> Params:
+    """Separate z/x/BC/dt projections (instead of one fused in_proj) so tensor
+    parallelism can shard each output cleanly by heads/groups — slicing a fused
+    projection would cut across shard boundaries and force resharding."""
+    P = d_inner // n_heads
+    ks = jax.random.split(key, 6)
+    d_bc = 2 * n_groups * d_state
+    return {
+        "wz": dense_init(ks[0], d, d_inner),            # gate
+        "wx": dense_init(ks[1], d, d_inner),            # ssm input (head-sharded)
+        "wbc": dense_init(ks[2], d, d_bc),              # B and C (group-sharded)
+        "wdt": dense_init(ks[3], d, n_heads),           # step sizes
+        "conv_w": 0.1 * jax.random.normal(ks[4], (4, d_inner + d_bc)),  # depthwise K=4
+        "conv_b": jnp.zeros((d_inner + d_bc,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),             # A = -exp(A_log)
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(0.01)) * jnp.ones((n_heads,), jnp.float32),
+        "norm_g": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d),
+    }
+
+
+def _depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv over (B, S, D) with kernel (K, D)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _segsum(lg: jax.Array) -> jax.Array:
+    """lg (..., L): pairwise decay exponents  out[t, s] = sum_{s < r <= t} lg[r]."""
+    L = lg.shape[-1]
+    cs = jnp.cumsum(lg, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]                     # t, s
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, h0=None):
+    """SSD scan.  x (b,S,H,P), dt (b,S,H), A (H,), B/C (b,S,G,N), D (H,).
+
+    Returns y (b,S,H,P) and final state (b,H,P,N).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)                                # (b,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = chunk
+    nc = x.shape[1] // L
+
+    def r(t):  # (b, S, ...) -> (nc, b, L, ...)
+        return t.reshape(b, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, Bc, Cc = r(x), r(dt), r(Bh), r(Ch)
+    lg = dtc * (-jnp.exp(A.astype(jnp.float32)))                   # (nc,b,L,H) log decay
+    xdt = xc * dtc[..., None]
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def per_chunk(h, inp):
+        xk, lgk, Bk, Ck, xdtk = inp                                # (b,L,...)
+        csum = jnp.cumsum(lgk, axis=1)                             # (b,L,H)
+        # intra-chunk (dual quadratic form within the chunk)
+        Ldec = jnp.exp(_segsum(lgk.swapaxes(1, 2)))                # (b,H,L,L)
+        scores = jnp.einsum("blhn,bshn->bhls", Ck, Bk) * Ldec.astype(Ck.dtype)
+        y_intra = jnp.einsum("bhls,bshp->blhp", scores, xdtk)
+        # contribution of the carried-in state
+        dec_in = jnp.exp(csum)                                     # (b,L,H)
+        y_inter = jnp.einsum("blhn,bhpn,blh->blhp", Ck, h.astype(Ck.dtype),
+                             dec_in.astype(Ck.dtype))
+        # new carried state: decay old state over the chunk, add chunk outer-products
+        dec_out = jnp.exp(csum[:, -1:, :] - csum)                  # (b,L,H) decay l -> end
+        h_add = jnp.einsum("blhn,blhp,blh->bhpn", Bk, xdtk, dec_out.astype(Bk.dtype))
+        chunk_decay = jnp.exp(csum[:, -1])[:, :, None, None]       # (b,H,1,1)
+        h_new = h * chunk_decay.astype(jnp.float32) + h_add.astype(jnp.float32)
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h_fin, ys = jax.lax.scan(per_chunk, h0, (xc, lg, Bc, Cc, xdt))
+    y = ys.swapaxes(0, 1).reshape(b, nc * L, H, P)[:, : S]
+    y = y + x[:, :S] * D.astype(y.dtype)[None, None, :, None]
+    return y, h_fin
+
+
+def ssd_recurrent_ref(x, dt, A, B, C, D, h0=None):
+    """Naive O(S) sequential oracle (fp32) — the ground truth for ssd_chunked."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    a = jnp.exp(dtf * (-jnp.exp(A.astype(jnp.float32))))           # (b,S,H)
+    h = jnp.zeros((b, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, at, bt, ct, dtt = inp                                  # (b,H,P),(b,H),(b,H,N)...
+        h = h * at[..., None, None] + jnp.einsum("bhn,bhp,bh->bhpn", bt, xt, dtt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, (xf.swapaxes(0, 1), a.swapaxes(0, 1),
+                                   Bh.swapaxes(0, 1), Ch.swapaxes(0, 1),
+                                   dtf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+# ------------------------------------------------------------------ full mixer block
+
+def _project(u, p):
+    """-> gate z, conv input [x|BC], dt logits."""
+    z = dense(u, p["wz"])
+    xbc = jnp.concatenate([dense(u, p["wx"]), dense(u, p["wbc"])], axis=-1)
+    dt = dense(u, p["wdt"])
+    return z, xbc, dt
+
+
+def mamba_forward(u: jax.Array, p: Params, *, d_inner: int, d_state: int,
+                  n_heads: int, n_groups: int = 1, chunk: int = 128,
+                  h0=None, return_state: bool = False):
+    """u (B, S, d) -> (B, S, d). Full Mamba2 mixer: proj -> conv -> SSD -> gate -> out."""
+    B_, S, _ = u.shape
+    P = d_inner // n_heads
+    d_bc = 2 * n_groups * d_state
+    z, xbc, dt_raw = _project(u, p)
+    xbc = _depthwise_conv(xbc, p["conv_w"], p["conv_b"])
+    x = xbc[..., :d_inner].reshape(B_, S, n_heads, P)
+    Bm = xbc[..., d_inner : d_inner + n_groups * d_state].reshape(B_, S, n_groups, d_state)
+    Cm = xbc[..., d_inner + n_groups * d_state :].reshape(B_, S, n_groups, d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"]).astype(u.dtype)
+    y, h_fin = ssd_chunked(x, dt, p["A_log"], Bm, Cm, p["D"], chunk=chunk, h0=h0)
+    y = y.reshape(B_, S, d_inner)
+    # gated RMSNorm (Mamba2 norm-before-gate)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf * p["norm_g"]).astype(u.dtype) * jax.nn.silu(z)
+    out = dense(y, p["out_proj"])
+    if return_state:
+        return out, h_fin
+    return out
+
+
+def mamba_init_cache(B: int, *, d_inner: int, d_state: int, n_heads: int,
+                     n_groups: int = 1, d_conv: int = 4, dtype=jnp.float32) -> SSMCache:
+    P = d_inner // n_heads
+    d_bc = 2 * n_groups * d_state
+    return SSMCache(
+        h=jnp.zeros((B, n_heads, P, d_state), jnp.float32),
+        conv=jnp.zeros((B, d_conv - 1, d_inner + d_bc), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba_decode(u: jax.Array, cache: SSMCache, p: Params, *, d_inner: int,
+                 d_state: int, n_heads: int, n_groups: int = 1
+                 ) -> Tuple[jax.Array, SSMCache]:
+    """One-token recurrent step. u (B, 1, d)."""
+    B_, _, _ = u.shape
+    P = d_inner // n_heads
+    d_bc = 2 * n_groups * d_state
+    z, xbc, dt_raw = _project(u[:, 0], p)                          # (B, ...)
+    # conv over [cached K-1 inputs, current]
+    hist = jnp.concatenate([cache.conv, xbc[:, None]], axis=1)     # (B, K, D)
+    w = p["conv_w"].astype(u.dtype)
+    xbc_c = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, w) + p["conv_b"].astype(u.dtype))
+    x = xbc_c[..., :d_inner].reshape(B_, n_heads, P)
+    Bm = xbc_c[..., d_inner : d_inner + n_groups * d_state].reshape(B_, n_groups, d_state)
+    Cm = xbc_c[..., d_inner + n_groups * d_state :].reshape(B_, n_groups, d_state)
+    rep = n_heads // n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))
+    h = cache.h * a[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", Bh, x.astype(jnp.float32), dt)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, d_inner)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * p["norm_g"]).astype(u.dtype) * jax.nn.silu(z)
+    out = dense(y[:, None], p["out_proj"])
+    return out, SSMCache(h=h, conv=hist[:, 1:], pos=cache.pos + 1)

@@ -1,0 +1,4 @@
+from repro.netsim.cost_model import (
+    BEST_NETWORK, HIGH_LAT, LOW_BW, WORST,
+    CommStrategy, NetworkCondition, comm_time, epoch_time, iter_time, strategies,
+)

@@ -1,0 +1,76 @@
+"""Analytic network cost model: per-iteration communication time vs
+(bandwidth, latency) for each synchronization strategy (paper Figs. 2-3).
+
+The paper measures wall-clock epoch time on 8 EC2 GPUs while throttling the NIC
+with ``tc``.  We have no real network, so we model the communication phase the
+way the paper's systems discussion does:
+
+* AllReduce (ring, full precision): 2(n-1)/n * M bytes through each NIC per
+  iteration, 2(n-1) latency-bound sequential steps.
+* Decentralized (ring gossip): each node sends its payload to 2 neighbors in
+  ONE round: bytes = 2 * M * (wire_bits/32), latency = 2 rounds (send both
+  directions concurrently => 1-2 link RTTs; we charge 2).
+* Compressed decentralized (DCD/ECD): same round structure, payload shrunk by
+  the wire ratio (8-bit codes + per-block scales ~ 8.03/32).
+
+comm_time = latency * rounds + bytes / bandwidth ;  iter_time = compute + comm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkCondition:
+    bandwidth_bps: float      # per-link bandwidth, bits/s
+    latency_s: float          # one-way link latency, seconds
+
+    def describe(self) -> str:
+        gbps = self.bandwidth_bps / 1e9
+        return f"{gbps:g}Gbps/{self.latency_s*1e3:g}ms"
+
+
+@dataclasses.dataclass(frozen=True)
+class CommStrategy:
+    name: str
+    bytes_per_iter: float     # through each node's NIC
+    latency_rounds: int       # sequential latency-bound rounds
+
+
+def strategies(model_bytes: float, n: int, wire_bits: float = 8.03) -> Dict[str, CommStrategy]:
+    M = model_bytes
+    return {
+        "allreduce": CommStrategy("allreduce", 2 * (n - 1) / n * M, 2 * (n - 1)),
+        "decentralized_fp": CommStrategy("decentralized_fp", 2 * M, 2),
+        "decentralized_lp": CommStrategy("decentralized_lp", 2 * M * wire_bits / 32, 2),
+        # naive centralized quantized (for completeness; paper omits it)
+        "allreduce_lp": CommStrategy("allreduce_lp", 2 * (n - 1) / n * M * wire_bits / 32,
+                                     2 * (n - 1)),
+    }
+
+
+def comm_time(s: CommStrategy, net: NetworkCondition) -> float:
+    return s.latency_rounds * net.latency_s + 8 * s.bytes_per_iter / net.bandwidth_bps
+
+
+def iter_time(s: CommStrategy, net: NetworkCondition, compute_s: float) -> float:
+    """Communication is not overlapped with compute in the paper's runs."""
+    return compute_s + comm_time(s, net)
+
+
+def epoch_time(s: CommStrategy, net: NetworkCondition, compute_s: float,
+               iters_per_epoch: int) -> float:
+    return iters_per_epoch * iter_time(s, net, compute_s)
+
+
+# Paper's experimental frame: ResNet-20 (~0.27M params, fp32) on CIFAR-10,
+# batch 128/node, 8 nodes => 48 iterations/epoch; ~50ms/iter GPU compute (K80).
+RESNET20_BYTES = 0.27e6 * 4
+PAPER_ITERS_PER_EPOCH = 50000 // (128 * 8)
+PAPER_COMPUTE_S = 0.05
+
+BEST_NETWORK = NetworkCondition(bandwidth_bps=1.4e9, latency_s=0.13e-3)
+LOW_BW = NetworkCondition(bandwidth_bps=50e6, latency_s=0.13e-3)
+HIGH_LAT = NetworkCondition(bandwidth_bps=1.4e9, latency_s=5e-3)
+WORST = NetworkCondition(bandwidth_bps=50e6, latency_s=5e-3)

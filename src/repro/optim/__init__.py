@@ -1,0 +1,2 @@
+from repro.optim.optimizers import OptState, Optimizer, adamw, sgd, make_optimizer
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine

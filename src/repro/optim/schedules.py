@@ -1,0 +1,33 @@
+"""Learning-rate schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cd = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.float32(lr) * s / max(warmup, 1)
+        return jnp.where(s < warmup, warm, cd(step - warmup))
+    return f
+
+
+def inv_sqrt_decay(lr: float, warmup: int):
+    """The paper's theory steplength shape: gamma ~ 1/(c + sqrt(T))."""
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return jnp.float32(lr) * jnp.minimum(s / max(warmup, 1), jnp.sqrt(warmup / s))
+    return f

@@ -1,0 +1,127 @@
+"""Algorithm semantics + the paper's convergence claims on a convex testbed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    IdentityCompressor,
+    RandomQuantizer,
+    make_algorithm,
+    mix,
+)
+from repro.core.algorithms import average_model, consensus_distance
+from repro.core.testbed import make_problem, run
+
+N, LR, T = 8, 0.02, 800
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(jax.random.key(0), n=N, m=256, d=32, hetero=0.2, noise=0.1, batch=8)
+
+
+def _run(problem, name, comp=None, T=T, lr=LR, topology="ring"):
+    algo = make_algorithm(name, N, topology, comp)
+    return run(problem, algo, T=T, lr=lr, eval_every=max(T // 4, 1))
+
+
+# ------------------------------------------------------------------ semantics
+
+def test_mix_matches_matmul():
+    W = np.random.default_rng(0).dirichlet(np.ones(5), size=5)
+    W = (W + W.T) / 2
+    W /= W.sum(1, keepdims=True)
+    X = {"a": jnp.arange(5 * 3, dtype=jnp.float32).reshape(5, 3), "b": jnp.ones((5, 2, 2))}
+    out = mix(W, X)
+    np.testing.assert_allclose(np.asarray(out["a"]), W @ np.asarray(X["a"]), rtol=1e-6)
+
+
+def test_dcd_equals_dpsgd_without_compression(problem):
+    """alpha = 0 => DCD-PSGD is exactly D-PSGD (paper: 'Consistence with D-PSGD')."""
+    a_dcd = make_algorithm("dcd", N, "ring", IdentityCompressor())
+    a_dps = make_algorithm("dpsgd", N, "ring", IdentityCompressor())
+    s1, s2 = a_dcd.init(jnp.zeros(32)), a_dps.init(jnp.zeros(32))
+    step1, step2 = a_dcd.step_fn(), a_dps.step_fn()
+    for k in jax.random.split(jax.random.key(1), 10):
+        kg, kc = jax.random.split(k)
+        g1 = problem.stoch_grads(kg, s1.params)
+        g2 = problem.stoch_grads(kg, s2.params)
+        s1 = step1(s1, g1, kc, jnp.float32(LR))
+        s2 = step2(s2, g2, kc, jnp.float32(LR))
+    np.testing.assert_allclose(np.asarray(s1.params), np.asarray(s2.params), atol=1e-6)
+
+
+def test_cpsgd_keeps_nodes_identical(problem):
+    algo = make_algorithm("cpsgd", N, "ring")
+    s = algo.init(jnp.zeros(32))
+    step = algo.step_fn()
+    for k in jax.random.split(jax.random.key(2), 5):
+        g = problem.stoch_grads(k, s.params)
+        s = step(s, g, k, jnp.float32(LR))
+    assert float(consensus_distance(s.params)) < 1e-12
+
+
+def test_ecd_estimate_error_diminishes(problem):
+    """ECD invariant: E||x_tilde - x||² = O(1/t) (Lemma 12)."""
+    comp = RandomQuantizer(bits=8, block_size=32)
+    algo = make_algorithm("ecd", N, "ring", comp)
+    s = algo.init(jnp.zeros(32))
+    step = jax.jit(algo.step_fn())
+    errs = []
+    for k in jax.random.split(jax.random.key(3), 400):
+        kg, kc = jax.random.split(k)
+        g = problem.stoch_grads(kg, s.params)
+        s = step(s, g, kc, jnp.float32(LR))
+        errs.append(float(jnp.sum((s.aux - s.params) ** 2)))
+    early, late = np.mean(errs[10:50]), np.mean(errs[-50:])
+    assert late < early  # diminishing estimate error
+
+
+# ------------------------------------------------------- convergence claims
+
+def test_dpsgd_converges_to_global_optimum(problem):
+    h = _run(problem, "dpsgd")
+    assert h["final_loss"] < 1.2 * h["opt_loss"] + 1e-3
+    assert h["final_dist_opt"] < 1e-2
+
+
+def test_dcd_8bit_matches_full_precision(problem):
+    """Paper Fig. 2a: 8-bit DCD-PSGD converges like full-precision."""
+    h = _run(problem, "dcd", RandomQuantizer(bits=8, block_size=32))
+    assert h["final_loss"] < 1.2 * h["opt_loss"] + 1e-3
+    assert h["final_dist_opt"] < 1e-2
+
+
+def test_ecd_8bit_matches_full_precision(problem):
+    h = _run(problem, "ecd", RandomQuantizer(bits=8, block_size=32))
+    assert h["final_loss"] < 1.5 * h["opt_loss"] + 5e-3
+
+
+def test_naive_compression_fails(problem):
+    """Paper Fig. 1 / Supp. D: naive compression does not reach the optimum."""
+    h_naive = _run(problem, "naive", RandomQuantizer(bits=4, block_size=32))
+    h_dcd = _run(problem, "dcd", RandomQuantizer(bits=4, block_size=32))
+    # naive stalls at least 10x farther from the optimum than DCD
+    assert h_naive["final_dist_opt"] > 10 * h_dcd["final_dist_opt"]
+    assert h_naive["final_loss"] > 5 * h_dcd["final_loss"]
+
+
+def test_linear_speedup_direction():
+    """More nodes with the same per-node batch => no worse final error (O(1/sqrt(nT)))."""
+    p_small = make_problem(jax.random.key(5), n=2, m=256, d=32, hetero=0.2, noise=1.0, batch=2)
+    p_big = make_problem(jax.random.key(5), n=16, m=256, d=32, hetero=0.2, noise=1.0, batch=2)
+    h2 = run(p_small, make_algorithm("dpsgd", 2, "ring"), T=300, lr=0.02, eval_every=300)
+    h16 = run(p_big, make_algorithm("dpsgd", 16, "ring"), T=300, lr=0.02, eval_every=300)
+    assert h16["final_dist_opt"] <= h2["final_dist_opt"] * 1.5
+
+
+def test_consensus_shrinks_over_training(problem):
+    h = _run(problem, "dcd", RandomQuantizer(bits=8, block_size=32))
+    assert h["consensus"][-1] < 1e-2
+
+
+def test_output_average_model():
+    X = {"w": jnp.stack([jnp.ones(3), 3 * jnp.ones(3)])}
+    avg = average_model(X)
+    np.testing.assert_allclose(np.asarray(avg["w"]), 2.0)

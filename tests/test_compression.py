@@ -1,0 +1,126 @@
+"""Unit + property tests for the unbiased stochastic compression operators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    IdentityCompressor,
+    RandomQuantizer,
+    RandomSparsifier,
+    make_compressor,
+    measured_alpha,
+)
+
+COMPRESSORS = [
+    IdentityCompressor(),
+    RandomQuantizer(bits=8, block_size=64),
+    RandomQuantizer(bits=4, block_size=64),
+    RandomQuantizer(bits=2, block_size=16),
+    RandomSparsifier(p=0.25),
+    RandomSparsifier(p=0.9),
+]
+
+
+@pytest.mark.parametrize("comp", COMPRESSORS, ids=lambda c: f"{c.name}-{getattr(c,'bits',getattr(c,'p',''))}")
+def test_unbiasedness(comp):
+    """Assumption 1.5: E[C(z)] = z.  Monte-Carlo with tight tolerance."""
+    key = jax.random.key(0)
+    z = jax.random.normal(jax.random.key(1), (257,))
+    n = 4000
+    acc = jnp.zeros_like(z)
+    acc2 = jnp.zeros_like(z)
+    apply = jax.jit(lambda k: comp(k, z))
+    for k in jax.random.split(key, n):
+        out = apply(k)
+        acc = acc + out
+        acc2 = acc2 + (out - z) ** 2
+    mean = np.asarray(acc / n)
+    # per-element MC std of the mean; allow 6 sigma (+ float accumulation slack)
+    std = np.sqrt(np.asarray(acc2 / n)) / np.sqrt(n)
+    assert np.all(np.abs(mean - np.asarray(z)) <= 6 * std + 5e-3)
+
+
+@pytest.mark.parametrize("comp", COMPRESSORS, ids=lambda c: f"{c.name}-{getattr(c,'bits',getattr(c,'p',''))}")
+def test_zero_maps_to_zero(comp):
+    z = jnp.zeros((130,))
+    out = comp(jax.random.key(0), z)
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantizer_roundtrip_shapes_dtypes(bits):
+    comp = RandomQuantizer(bits=bits, block_size=128)
+    for shape in [(7,), (128,), (129,), (4, 33), (2, 3, 5)]:
+        for dtype in [jnp.float32, jnp.bfloat16]:
+            z = jax.random.normal(jax.random.key(3), shape, dtype=dtype)
+            out = comp(jax.random.key(4), z)
+            assert out.shape == shape and out.dtype == dtype
+            # error bounded by one quantization bin per element
+            payload = comp.compress(jax.random.key(4), z)
+            bin_w = np.asarray(payload["scale"]).max() / comp.levels
+            assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - z.astype(jnp.float32)))) <= bin_w + 1e-5
+
+
+def test_quantizer_wire_format_is_small():
+    comp = RandomQuantizer(bits=8, block_size=256)
+    z = jax.random.normal(jax.random.key(0), (4096,))
+    p = comp.compress(jax.random.key(1), z)
+    assert p["codes"].dtype == jnp.int8
+    assert p["codes"].size == 4096 and p["scale"].size == 16
+    assert comp.wire_bits_per_element() < 9
+
+
+def test_alpha_ordering():
+    """More aggressive compression => larger measured alpha; 8-bit within DCD limit."""
+    key = jax.random.key(0)
+    z = jax.random.normal(jax.random.key(1), (4096,))
+    a8 = measured_alpha(RandomQuantizer(bits=8, block_size=256), key, z)
+    a4 = measured_alpha(RandomQuantizer(bits=4, block_size=256), key, z)
+    a2 = measured_alpha(RandomQuantizer(bits=2, block_size=256), key, z)
+    assert a8 < a4 < a2
+    assert a8 < 0.05  # 8-bit is well inside any reasonable DCD alpha budget
+
+
+def test_sparsifier_variance_matches_theory():
+    """E||C(z)-z||² = (1/p - 1)||z||²."""
+    p = 0.25
+    comp = RandomSparsifier(p=p)
+    z = jax.random.normal(jax.random.key(1), (2048,))
+    errs = [float(jnp.sum((comp(k, z) - z) ** 2)) for k in jax.random.split(jax.random.key(0), 200)]
+    expect = (1 / p - 1) * float(jnp.sum(z**2))
+    assert abs(np.mean(errs) - expect) / expect < 0.15
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    n=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_quantizer_properties(bits, n, seed, scale):
+    """Property: any shape/scale quantizes within one bin, preserves zeros, is finite."""
+    comp = RandomQuantizer(bits=bits, block_size=128)
+    z = scale * jax.random.normal(jax.random.key(seed), (n,))
+    out = comp(jax.random.key(seed + 1), z)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    payload = comp.compress(jax.random.key(seed + 1), z)
+    bin_w = np.asarray(payload["scale"]).max() / comp.levels
+    assert float(jnp.max(jnp.abs(out - z))) <= bin_w * (1 + 1e-5) + 1e-6
+
+
+def test_tree_apply_independent_keys():
+    comp = RandomQuantizer(bits=4, block_size=64)
+    leaf = jax.random.normal(jax.random.key(9), (64,))
+    tree = {"a": leaf, "b": leaf}  # identical values, but independent keys per leaf
+    out = comp.tree_apply(jax.random.key(0), tree)
+    assert set(out) == {"a", "b"}
+    assert not np.allclose(np.asarray(out["a"]), np.asarray(out["b"]))
+
+
+def test_registry():
+    assert make_compressor("quant", bits=4).bits == 4
+    assert make_compressor("identity").name == "identity"
+    assert make_compressor("sparsify", p=0.5).p == 0.5

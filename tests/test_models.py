@@ -1,0 +1,217 @@
+"""Per-architecture smoke tests (reduced configs) + component correctness tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import attention as attn
+from repro.models import encdec as ed
+from repro.models.api import build_model, make_batch
+from repro.models.moe import moe_forward, moe_init
+from repro.models.ssm import ssd_chunked, ssd_recurrent_ref
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced variant: one forward + one SGD train step on CPU; shapes + no NaNs."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1), batch=2, seq=32)
+
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b))(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    assert loss.shape == ()
+
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), f"{arch}: NaN grads"
+    new_params = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+    loss2, _ = jax.jit(lambda p, b: model.loss(p, b))(new_params, batch)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) < float(loss) + 1.0  # SGD step did not explode
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    caches = model.init_cache(2, 16)
+    if cfg.is_encdec:
+        frames = jax.random.normal(jax.random.key(2), (2, cfg.frontend.n_tokens, cfg.frontend.dim))
+        caches = ed.encdec_prefill_cross(cfg, params, frames, caches)
+    logits, new_caches = jax.jit(model.decode_step)(params, caches, jnp.zeros((2, 1), jnp.int32))
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN decode logits"
+    # cache position advanced
+    flat_pos = [l for l in jax.tree.leaves(new_caches) if l.dtype == jnp.int32]
+    assert any(bool(jnp.all(p >= 1)) for p in flat_pos)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mistral-large-123b", "starcoder2-15b",
+                                  "codeqwen1.5-7b", "internvl2-76b"])
+def test_dense_decode_matches_forward(arch):
+    """Full-attention archs: step-decode logits == teacher-forced forward (KV cache exact)."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab)
+    full = model.logits(params, {"tokens": toks})
+    caches = model.init_cache(2, 12)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(8):
+        lg, caches = step(params, caches, toks[:, t : t + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32), np.asarray(full, np.float32),
+                               atol=5e-2)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "zamba2-7b"])
+def test_ssm_decode_tracks_forward(arch):
+    """Recurrent decode vs chunked-SSD forward: agree within bf16 accumulation noise."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab)
+    full = model.logits(params, {"tokens": toks}).astype(jnp.float32)
+    caches = model.init_cache(2, 12)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(8):
+        lg, caches = step(params, caches, toks[:, t : t + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1).astype(jnp.float32)
+    scale = float(jnp.std(full)) + 1e-6
+    assert float(jnp.max(jnp.abs(dec - full))) < 0.25 * scale
+
+
+def test_ssd_chunked_matches_recurrent_oracle():
+    b, S, H, P, G, N = 2, 67, 4, 8, 2, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = jax.random.normal(ks[2], (H,)) * 0.5
+    B = jax.random.normal(ks[3], (b, S, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (b, S, G, N)) * 0.3
+    D = jnp.ones((H,))
+    for chunk in (8, 16, 64, 128):
+        y1, h1 = ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+        y2, h2 = ssd_recurrent_ref(x, dt, A, B, C, D)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)
+
+
+def test_ssd_state_carry_across_calls():
+    """Chunked prefill with carried state == one long prefill (needed for chunked serving)."""
+    b, S, H, P, G, N = 1, 32, 2, 4, 1, 8
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = jax.random.normal(ks[2], (H,)) * 0.5
+    B = jax.random.normal(ks[3], (b, S, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (b, S, G, N)) * 0.3
+    D = jnp.zeros((H,))
+    y_full, h_full = ssd_chunked(x, dt, A, B, C, D, chunk=8)
+    y1, h1 = ssd_chunked(x[:, :16], dt[:, :16], A, B[:, :16], C[:, :16], D, chunk=8)
+    y2, h2 = ssd_chunked(x[:, 16:], dt[:, 16:], A, B[:, 16:], C[:, 16:], D, chunk=8, h0=h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=2e-5)
+
+
+def test_moe_routing_properties():
+    d, E, k = 32, 4, 2
+    p = moe_init(jax.random.key(0), d, 16, E, 1)
+    x = jax.random.normal(jax.random.key(1), (2, 16, d), dtype=jnp.bfloat16)
+    out, aux = moe_forward(x, p, n_routed=E, n_shared=1, top_k=k, capacity_factor=2.0)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(aux["lb_loss"])) and float(aux["lb_loss"]) > 0
+    assert bool(jnp.isfinite(aux["z_loss"]))
+    # balanced router at init => lb_loss ~ 1 (its minimum is exactly 1 for uniform routing)
+    assert 0.5 < float(aux["lb_loss"]) < 4.0
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With generous capacity no token is dropped: output != 0 for every token."""
+    d, E, k = 16, 4, 2
+    p = moe_init(jax.random.key(0), d, 16, E, 0)
+    x = jax.random.normal(jax.random.key(1), (1, 32, d))
+    out, _ = moe_forward(x, p, n_routed=E, n_shared=0, top_k=k, capacity_factor=4.0)
+    norms = jnp.linalg.norm(out[0], axis=-1)
+    assert float(jnp.min(norms)) > 0
+
+
+def test_sliding_window_ring_buffer_equals_full_when_window_covers():
+    """Ring-buffer decode with window >= seq == full-cache decode."""
+    cfg = get_config("granite-3-2b").reduced()
+    p = attn.gqa_init(jax.random.key(0), cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd, theta=1e4)
+    x = jax.random.normal(jax.random.key(1), (2, 6, cfg.d_model), dtype=jnp.float32) * 0.3
+    c_full = attn.gqa_init_cache(2, 8, cfg.n_kv_heads, cfg.hd, dtype=jnp.float32)
+    c_ring = attn.gqa_init_cache(2, 8, cfg.n_kv_heads, cfg.hd, window=8, dtype=jnp.float32)
+    for t in range(6):
+        o1, c_full = attn.gqa_decode(x[:, t : t + 1], c_full, p, **kw)
+        o2, c_ring = attn.gqa_decode(x[:, t : t + 1], c_ring, p, **kw)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_sliding_window_ring_buffer_truncates_context():
+    """With a small window, ring-buffer attention only sees the last `window` tokens."""
+    cfg = get_config("granite-3-2b").reduced()
+    p = attn.gqa_init(jax.random.key(0), cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd, theta=1e4)
+    S, W = 10, 4
+    x = jax.random.normal(jax.random.key(1), (1, S, cfg.d_model), dtype=jnp.float32) * 0.3
+    c_ring = attn.gqa_init_cache(1, S, cfg.n_kv_heads, cfg.hd, window=W, dtype=jnp.float32)
+    for t in range(S):
+        o_ring, c_ring = attn.gqa_decode(x[:, t : t + 1], c_ring, p, **kw)
+    # reference: feed only the last W tokens into a fresh full cache
+    c_ref = attn.gqa_init_cache(1, W, cfg.n_kv_heads, cfg.hd, dtype=jnp.float32)
+    # positions matter for rope: replay with correct absolute positions via ring cache
+    c_ref = attn.gqa_init_cache(1, S, cfg.n_kv_heads, cfg.hd, window=None, dtype=jnp.float32)
+    for t in range(S):
+        o_ref, c_ref = attn.gqa_decode(x[:, t : t + 1], c_ref, p, **kw)
+    # full context vs windowed must differ (proves truncation actually happens)
+    assert float(jnp.max(jnp.abs(o_ring - o_ref))) > 1e-6
+    assert c_ring.k.shape[1] == W
+
+
+def test_vlm_frontend_changes_text_logits():
+    """Patch embeddings must influence the text stream (projector + concat wired up)."""
+    cfg = get_config("internvl2-76b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 8), 0, cfg.vocab)
+    e1 = jax.random.normal(jax.random.key(2), (1, cfg.frontend.n_tokens, cfg.frontend.dim))
+    l1 = model.logits(params, {"tokens": toks, "extra_embeds": e1})
+    l2 = model.logits(params, {"tokens": toks, "extra_embeds": 2.0 * e1})
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-4
+
+
+def test_whisper_cross_attention_sees_encoder():
+    cfg = get_config("whisper-base").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 8), 0, cfg.vocab)
+    f1 = jax.random.normal(jax.random.key(2), (1, cfg.frontend.n_tokens, cfg.frontend.dim))
+    l1 = model.logits(params, {"tokens": toks, "extra_embeds": f1})
+    l2 = model.logits(params, {"tokens": toks, "extra_embeds": 0.0 * f1})
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-4
+
+
+def test_zamba2_shared_attention_is_truly_shared():
+    """Zamba2: one shared attention block — grads accumulate across all applications."""
+    cfg = get_config("zamba2-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1), batch=1, seq=16)
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    g_attn = grads["shared_attn"]["attn"]["wq"]
+    assert bool(jnp.any(g_attn != 0))
+    # param count: shared block appears once
+    n_attn_blocks = 1
+    assert params["shared_attn"]["attn"]["wq"].ndim == 2  # not stacked

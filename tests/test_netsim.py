@@ -1,0 +1,60 @@
+"""Network cost model tests (the substrate for paper Figs. 2-3)."""
+import pytest
+
+from repro.netsim import (
+    BEST_NETWORK, HIGH_LAT, LOW_BW, WORST, NetworkCondition,
+    comm_time, epoch_time, iter_time, strategies,
+)
+from repro.netsim.cost_model import PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH, RESNET20_BYTES
+
+
+@pytest.fixture
+def strat():
+    return strategies(RESNET20_BYTES, n=8)
+
+
+def test_allreduce_latency_scales_with_n():
+    s8 = strategies(1e6, 8)["allreduce"]
+    s16 = strategies(1e6, 16)["allreduce"]
+    assert s16.latency_rounds > s8.latency_rounds
+    # decentralized rounds do NOT scale with n
+    assert strategies(1e6, 16)["decentralized_fp"].latency_rounds == \
+        strategies(1e6, 8)["decentralized_fp"].latency_rounds == 2
+
+
+def test_compression_shrinks_bytes(strat):
+    assert strat["decentralized_lp"].bytes_per_iter < 0.3 * strat["decentralized_fp"].bytes_per_iter
+
+
+def test_best_network_all_equal(strat):
+    times = {k: epoch_time(s, BEST_NETWORK, PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH)
+             for k, s in strat.items()}
+    assert max(times.values()) / min(times.values()) < 1.2
+
+
+def test_high_latency_decentralized_wins(strat):
+    t = {k: iter_time(s, HIGH_LAT, PAPER_COMPUTE_S) for k, s in strat.items()}
+    assert t["decentralized_fp"] < t["allreduce"]
+    assert t["decentralized_lp"] < t["allreduce"]
+
+
+def test_low_bandwidth_compression_wins(strat):
+    t = {k: iter_time(s, LOW_BW, PAPER_COMPUTE_S) for k, s in strat.items()}
+    assert t["decentralized_lp"] < t["decentralized_fp"]
+
+
+def test_worst_network_only_compressed_decentralized(strat):
+    """The paper's headline: both tricks together beat either alone."""
+    t = {k: epoch_time(s, WORST, PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH)
+         for k, s in strat.items()}
+    assert t["decentralized_lp"] < 0.5 * t["allreduce"]
+    assert t["decentralized_lp"] < 0.5 * t["decentralized_fp"]
+    # and beats centralized quantized too (latency still hurts it)
+    assert t["decentralized_lp"] < t["allreduce_lp"]
+
+
+def test_comm_time_monotone_in_latency():
+    s = strategies(1e6, 8)["allreduce"]
+    t1 = comm_time(s, NetworkCondition(1e9, 1e-4))
+    t2 = comm_time(s, NetworkCondition(1e9, 1e-2))
+    assert t2 > t1

@@ -1,0 +1,61 @@
+"""Mixing-matrix tests: Assumption 1.2/1.3 for every topology and size."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+
+@pytest.mark.parametrize("name", ["ring", "chain", "full", "star", "torus"])
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 8, 16, 32])
+def test_valid_mixing_matrix(name, n):
+    if name in ("chain", "star") and n < 2:
+        pytest.skip("needs >= 2 nodes")
+    W = topo.make_topology(name, n)
+    topo.check_mixing_matrix(W)
+
+
+@pytest.mark.parametrize("n", [3, 8, 16, 32])
+def test_ring_spectral_gap_shrinks_with_n(n):
+    info = topo.spectral_info(topo.ring(n))
+    assert 0 < info.spectral_gap < 1
+    if n >= 8:
+        bigger = topo.spectral_info(topo.ring(2 * n))
+        assert bigger.spectral_gap < info.spectral_gap
+
+
+def test_full_topology_has_perfect_mixing():
+    info = topo.spectral_info(topo.fully_connected(8))
+    assert info.rho == pytest.approx(0.0, abs=1e-10)
+
+
+def test_dcd_alpha_budget_matches_theorem():
+    """Theorem 1 constraint: alpha < (1-rho)/(2 mu)."""
+    info = topo.spectral_info(topo.ring(8))
+    amax = info.dcd_alpha_max()
+    assert amax == pytest.approx(info.spectral_gap / (2 * info.mu))
+    # budget shrinks as the ring grows (paper §4.2: DCD fails for many workers)
+    assert topo.spectral_info(topo.ring(16)).dcd_alpha_max() < amax
+
+
+def test_mixing_preserves_mean():
+    """W 1 = 1: gossip never changes the node average."""
+    rng = np.random.default_rng(0)
+    for name in ["ring", "chain", "full", "star"]:
+        W = topo.make_topology(name, 8)
+        x = rng.normal(size=(8, 5))
+        np.testing.assert_allclose((W @ x).mean(0), x.mean(0), atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 40))
+def test_metropolis_on_random_graph(n):
+    rng = np.random.default_rng(n)
+    A = rng.random((n, n)) < 0.4
+    A = np.triu(A, 1)
+    A = A | A.T
+    # force connectivity with a chain backbone
+    for i in range(n - 1):
+        A[i, i + 1] = A[i + 1, i] = True
+    W = topo.metropolis(A)
+    topo.check_mixing_matrix(W)
