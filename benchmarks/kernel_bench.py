@@ -1,4 +1,9 @@
-"""Microbenchmarks: quantization kernel (CPU interpret timing + wire-format ratio)."""
+"""Microbenchmarks: quantization kernels (CPU interpret timing + measured wire ratio).
+
+Wire ratios are computed from the payload's actual container nbytes (packed
+uint32 words at 4 bits, int8 at 8 bits, plus per-block fp32 scales) — the same
+bytes the decentralized ring step puts on the collective-permute.
+"""
 from __future__ import annotations
 
 import time
@@ -11,8 +16,9 @@ from repro.kernels import ops as kops
 
 
 def _time(fn, *args, iters: int = 20) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    """us/call of an already-jitted callable: one warmup call (compile + cache),
+    then time the hot loop."""
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -24,14 +30,28 @@ def main(rows: List[str]) -> None:
         x = jax.random.normal(jax.random.key(0), (n,))
         key = jax.random.key(1)
 
-        q = jax.jit(lambda k, v: kops.quantize(k, v, bits=8, block_size=1024))
-        us = _time(q, key, x)
-        payload = q(key, x)
-        wire = payload["codes"].nbytes + payload["scale"].nbytes
-        rows.append(f"kernel.quant8.n{n},{us:.1f},{x.nbytes/wire:.2f}")
+        for bits, tag in ((8, "quant8"), (4, "quant4packed"), (2, "quant2packed")):
+            q = jax.jit(lambda k, v, b=bits: kops.quantize(k, v, bits=b, block_size=1024))
+            us = _time(q, key, x)
+            payload = q(key, x)
+            wire = kops.payload_nbytes(payload)
+            rows.append(f"kernel.{tag}.n{n},{us:.1f},{x.nbytes / wire:.2f}")
 
-        d = jax.jit(lambda p: kops.dequantize(p, bits=8, shape=(n,)))
-        us = _time(d, payload)
-        rows.append(f"kernel.dequant8.n{n},{us:.1f},0")
-    # compression ratio derived: fp32 -> int8 codes + fp32 scale per 1024
-    rows.append("kernel.wire_bits_per_elem_8bit,0,8.03")
+            d = jax.jit(lambda p, b=bits: kops.dequantize(p, bits=b, shape=(n,)))
+            us = _time(d, payload)
+            rows.append(f"kernel.de{tag}.n{n},{us:.1f},0")
+
+        # fused receive path: unpack + dequant + accumulate in one kernel pass
+        payload4 = jax.jit(lambda k, v: kops.quantize(k, v, bits=4, block_size=1024))(key, x)
+        axpy = jax.jit(lambda p, a: kops.dequant_axpy(p, a, bits=4, weight=1.0 / 3.0))
+        us = _time(axpy, payload4, x)
+        rows.append(f"kernel.dequant4_axpy_fused.n{n},{us:.1f},0")
+
+    # wire bits/element measured from payload containers (block_size=1024)
+    for bits in (8, 4, 2):
+        p = jax.eval_shape(
+            lambda k, v, b=bits: kops.quantize(k, v, bits=b, block_size=1024),
+            jax.random.key(0), jax.ShapeDtypeStruct((1 << 20,), jnp.float32))
+        rows.append(
+            f"kernel.wire_bits_per_elem_{bits}bit,0,"
+            f"{8.0 * kops.payload_nbytes(p) / (1 << 20):.4f}")

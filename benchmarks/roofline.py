@@ -51,6 +51,11 @@ def main(rows: List[str], path: str = "results/dryrun.jsonl") -> None:
         dominant = {"compute": r["t_compute_s"], "memory": r["t_memory_s"],
                     "collective": r["t_collective_s"]}[r["bottleneck"]]
         rows.append(f"roofline.{tag}.dominant_{r['bottleneck']}_s,0,{dominant:.3e}")
+        if "wire_bits_per_element" in r:
+            # measured from the encoded payload's container nbytes at dry-run
+            # time — matches the s8/u32 collective-permute operands in the HLO
+            rows.append(f"roofline.{tag}.wire_bits_per_elem,0,"
+                        f"{r['wire_bits_per_element']:.4f}")
 
 
 if __name__ == "__main__":

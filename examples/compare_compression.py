@@ -23,9 +23,13 @@ def main():
               f"DCD alpha budget={info.dcd_alpha_max():.3f}")
         problem = make_problem(jax.random.key(1), n=n, m=256, d=32,
                                hetero=0.2, noise=0.1)
-        print(f"{'bits':>5} {'alpha':>8} {'dcd dist_opt':>14} {'ecd dist_opt':>14}")
+        print(f"{'bits':>5} {'wire b/elem':>12} {'alpha':>8} "
+              f"{'dcd dist_opt':>14} {'ecd dist_opt':>14}")
         for bits in (8, 4, 3, 2):
             comp = RandomQuantizer(bits=bits, block_size=32)
+            # measured from the payload containers: packed 4/2-bit words hit
+            # ~bits+1 (block 32), while "3-bit" honestly ships its int8 container
+            wire = comp.wire_bits_per_element()
             alpha = measured_alpha(comp, jax.random.key(2), z)
             res = {}
             for name in ("dcd", "ecd"):
@@ -33,7 +37,8 @@ def main():
                         T=600, lr=0.01, eval_every=600)
                 res[name] = h["final_dist_opt"]
             flag = "  <-- alpha over DCD budget" if alpha > info.dcd_alpha_max() else ""
-            print(f"{bits:>5} {alpha:>8.3f} {res['dcd']:>14.3e} {res['ecd']:>14.3e}{flag}")
+            print(f"{bits:>5} {wire:>12.2f} {alpha:>8.3f} "
+                  f"{res['dcd']:>14.3e} {res['ecd']:>14.3e}{flag}")
 
 
 if __name__ == "__main__":

@@ -19,19 +19,40 @@ Each operator exposes the *wire format* explicitly (``compress`` -> payload pytr
 payload — not the fp32 tensor — on the network, and ``wire_bits_per_element`` so the
 network cost model and the roofline analysis can account for it.
 
+For the quantizer the wire format is *real*, not modeled: 2- and 4-bit codes are
+bit-packed into uint32 words (8x4-bit / 16x2-bit per word, the planar layout of
+kernels/quant.py), while 8-bit and odd widths ship one int8 per element — so a
+"3-bit" quantizer honestly reports ~8 wire bits/element, since that is what its
+int8 container actually ships.  ``wire_bits_per_element`` is derived from the
+payload's container sizes via ``jax.eval_shape`` on ``compress`` (model ==
+measured by construction; asserted in tests/test_compression.py).
+
 All operators are pure functions of a PRNG key: jit/vmap/shard_map friendly.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ops import payload_nbytes
+from repro.kernels.quant import PACKABLE_BITS
+from repro.kernels.ref import aligned_block, pack_codes, unpack_codes
+
 Payload = Any  # pytree of arrays
+
+
+@functools.lru_cache(maxsize=256)
+def _measured_wire_bits(comp: "Compressor", n: int) -> float:
+    """Wire bits/element from the *actual* payload containers (via eval_shape)."""
+    payload = jax.eval_shape(
+        comp.compress, jax.random.key(0), jax.ShapeDtypeStruct((n,), jnp.float32))
+    return 8.0 * payload_nbytes(payload) / n
 
 
 class Compressor:
@@ -105,33 +126,57 @@ class RandomQuantizer(Compressor):
 
     For a block ``b`` with scale ``s = max|b|`` and ``L = 2^(bits-1) - 1`` levels,
     each element is stochastically rounded to ``q in {-L..L}`` such that
-    ``E[q * s / L] = v`` — unbiased by construction.  Wire format: the integer
-    codes (int8) plus one fp32 scale per ``block_size`` elements.
+    ``E[q * s / L] = v`` — unbiased by construction.
 
-    ``use_kernel=True`` routes through the Pallas TPU kernel (kernels/quant.py);
-    the default pure-jnp path is the reference semantics (kernels/ref.py shares it).
+    Wire format: one fp32 scale per ``block_size`` elements, plus the codes in
+    their *actual* container — bit-packed uint32 words for ``bits in {2, 4}``
+    (``pack=None`` default; 8 or 16 codes per word), int8 otherwise.  Packing is
+    lossless on the codes, so the operator's distribution is identical packed or
+    not; only the bytes on the wire change.
+
+    ``use_kernel=True`` routes through the Pallas TPU kernels (kernels/quant.py,
+    fused quantize+pack); the default pure-jnp path is the reference semantics
+    (kernels/ref.py shares the hash and the word layout).
     """
 
     bits: int = 8
     block_size: int = 1024
     name: str = "quant"
     use_kernel: bool = False
+    pack: Optional[bool] = None
 
     def __post_init__(self):
-        assert 2 <= self.bits <= 8, "int8 container supports 2..8 bits"
+        assert 2 <= self.bits <= 8, "2..8-bit levels supported"
+        if self.pack:
+            assert self.bits in PACKABLE_BITS, \
+                f"packable bits are {PACKABLE_BITS}, got {self.bits}"
+        if self.packed:
+            cpw = 32 // self.bits
+            assert self.block_size % cpw == 0, \
+                f"packed {self.bits}-bit needs block_size % {cpw} == 0"
+
+    @property
+    def packed(self) -> bool:
+        return self.bits in PACKABLE_BITS if self.pack is None else self.pack
 
     @property
     def levels(self) -> int:
         return 2 ** (self.bits - 1) - 1
 
+    def _block_for(self, n: int) -> int:
+        if self.packed:
+            return aligned_block(self.block_size, n, bits=self.bits)
+        return min(self.block_size, max(n, 1))
+
     def compress(self, key, x):
         if self.use_kernel:
             from repro.kernels import ops as kops
 
-            return kops.quantize(key, x, bits=self.bits, block_size=self.block_size)
+            return kops.quantize(key, x, bits=self.bits,
+                                 block_size=self.block_size, pack=self.packed)
         x = x.astype(jnp.float32)
         n = x.size
-        bs = min(self.block_size, max(n, 1))
+        bs = self._block_for(n)
         pad = (-n) % bs
         flat = jnp.pad(x.reshape(-1), (0, pad))
         blocks = flat.reshape(-1, bs)
@@ -140,19 +185,24 @@ class RandomQuantizer(Compressor):
         v = blocks / safe * self.levels
         q = _stochastic_round(key, v)
         q = jnp.clip(q, -self.levels, self.levels).astype(jnp.int8)
+        if self.packed:
+            q = pack_codes(q, bits=self.bits)
         return {"codes": q, "scale": scale.astype(jnp.float32)}
 
     def decompress(self, payload, like):
-        q = payload["codes"].astype(jnp.float32)
-        scale = payload["scale"]
-        blocks = q * (scale / self.levels)
+        q = payload["codes"]
+        if q.dtype == jnp.uint32:  # packed wire format is self-describing
+            q = unpack_codes(q, bits=self.bits)
+        blocks = q.astype(jnp.float32) * (payload["scale"] / self.levels)
         flat = blocks.reshape(-1)
         n = int(np.prod(like.shape)) if like.shape else 1
         return flat[:n].reshape(like.shape).astype(like.dtype)
 
     def wire_bits_per_element(self, shape=None) -> float:
-        # int codes + amortized per-block fp32 scale
-        return self.bits + 32.0 / self.block_size
+        # derived from the payload's real container sizes, not a formula: packed
+        # widths cost bits + 32/block; unpacked widths cost their int8 container
+        n = int(np.prod(shape)) if shape is not None else self.block_size
+        return _measured_wire_bits(self, n)
 
     def alpha_bound(self) -> float:
         """Worst-case signal-to-noise ratio alpha for this quantizer.
@@ -181,7 +231,9 @@ class RandomSparsifier(Compressor):
         return payload["values"].reshape(like.shape).astype(like.dtype)
 
     def wire_bits_per_element(self, shape=None) -> float:
-        # value (32b) + index overhead (~32b) for the kept fraction
+        # MODELED, not measured: an idealized (value + index) sparse codec.  The
+        # in-memory payload is dense fp32 (sharding-friendly); a real sparse
+        # wire codec is an open item in ROADMAP.md.
         return self.p * 64.0
 
     def alpha_bound(self) -> float:

@@ -4,8 +4,9 @@ Global view: decentralized state is *stacked* — every array gets a leading nod
 axis sharded over the mesh ``node`` axis, so "node i's replica" is slice ``i``.
 Ring gossip is ``jnp.roll(payload, ±1, axis=0)``, which XLA lowers to
 ``collective-permute`` of exactly the payload we roll.  Because DCD/ECD roll the
-**int8 codes + per-block scales**, the compiled program's wire traffic on the node
-axis is the compressed payload — the paper's ~4x traffic reduction is visible in
+**codes + per-block scales** — int8 at 8 bits, bit-packed uint32 words at 2/4
+bits — the compiled program's wire traffic on the node axis is the compressed
+payload: ~4x traffic reduction at 8 bits and ~8x at packed 4 bits is visible in
 the dry-run HLO, not just claimed.
 
 Algorithm state (beyond params X and optimizer moments):
@@ -29,8 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.quant import uniform_from_hash
-from repro.kernels.ref import dequantize_2d_ref, quantize_2d_ref
+from repro.kernels.ops import payload_nbytes as _payload_nbytes
+from repro.kernels.quant import PACKABLE_BITS, uniform_from_hash
+from repro.kernels.ref import aligned_block, pack_codes, unpack_codes
 from repro.optim.optimizers import Optimizer, apply_updates
 
 
@@ -82,45 +84,55 @@ def _dequantize_nd(codes: jax.Array, scale: jax.Array, *, bits: int,
 class WireCodec:
     """Quantized wire format for one pytree, vmapped over the node axis.
 
-    ``pack=True`` (default for bits <= 4) nibble-packs two 4-bit codes per int8
-    byte before the collective-permute — a beyond-paper optimization that halves
-    the gossip wire bytes on top of the paper's quantization (the paper's MPI
+    ``pack=True`` (default for bits in {2, 4}) bit-packs the codes into uint32
+    words *before* the collective-permute — 8x4-bit or 16x2-bit codes per word,
+    using the planar layout shared with the Pallas kernels (kernels/quant.py)
+    and the jnp reference codec (kernels/ref.py).  The stacked payload that
+    ``jnp.roll`` moves over the node axis is therefore the packed words + the
+    per-block scales: a ``bits=4`` ring step ships ~4.03 bits/element, the
+    paper's compression ratio as actual wire bytes (the paper's own MPI
     implementation sent one value per byte even at 4 bits).
+
+    Packing is along the last (block) dim only, so it preserves the leaf's
+    leading-dim sharding exactly like ``_quantize_nd`` does.
     """
 
     bits: int = 8
     block: int = 1024
     pack: Optional[bool] = None
 
+    def __post_init__(self):
+        if self.pack:
+            assert self.bits in PACKABLE_BITS, \
+                f"packable bits are {PACKABLE_BITS}, got {self.bits}"
+        if self.packed:
+            cpw = 32 // self.bits
+            assert self.block % cpw == 0, \
+                f"packed {self.bits}-bit needs block % {cpw} == 0"
+
     @property
     def packed(self) -> bool:
-        return self.bits <= 4 if self.pack is None else self.pack
+        return self.bits in PACKABLE_BITS if self.pack is None else self.pack
 
-    def _pack(self, codes: jax.Array) -> jax.Array:
-        """int8 codes in [-7,7] -> nibbles, two per byte (last dim halves)."""
-        u = (codes.astype(jnp.int32) + 8).astype(jnp.uint8)   # 4-bit unsigned
-        lo, hi = u[..., 0::2], u[..., 1::2]
-        return (lo | (hi << 4)).astype(jnp.uint8)
-
-    def _unpack(self, packed: jax.Array) -> jax.Array:
-        lo = (packed & jnp.uint8(0x0F)).astype(jnp.int32) - 8
-        hi = ((packed >> jnp.uint8(4)) & jnp.uint8(0x0F)).astype(jnp.int32) - 8
-        out = jnp.stack([lo, hi], axis=-1)
-        return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2).astype(jnp.int8)
+    def _block_for(self, last: int) -> int:
+        if self.packed:
+            return aligned_block(self.block, last, bits=self.bits)
+        return min(self.block, max(last, 1))
 
     def encode(self, tree: Any, step: jax.Array, salt: int) -> Any:
-        """tree leaves (n, ...) -> {codes (n, ..., nblk, block[/2]) int8,
-        scale (n, ..., nblk, 1) f32} — blocked over the last dim so the
-        quantize stays shard-local (see _quantize_nd)."""
+        """tree leaves (n, ...) -> {codes (n, ..., nblk, W) uint32 packed words
+        (or (n, ..., nblk, block) int8 unpacked), scale (n, ..., nblk, 1) f32}
+        — blocked over the last dim so the quantize stays shard-local (see
+        _quantize_nd)."""
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         out = []
         for li, leaf in enumerate(leaves):
             seed = (step.astype(jnp.uint32) * jnp.uint32(2654435761)
                     ^ jnp.uint32(salt * 97 + li))
-            block = min(self.block, max(leaf.shape[-1], 1))
+            block = self._block_for(leaf.shape[-1])
             codes, scale = _quantize_nd(leaf, seed, bits=self.bits, block=block)
             if self.packed:
-                codes = self._pack(codes)
+                codes = pack_codes(codes, bits=self.bits)
             out.append({"codes": codes, "scale": scale})
         return treedef, out
 
@@ -128,14 +140,28 @@ class WireCodec:
         likes = jax.tree_util.tree_leaves(like_tree)
         outs = []
         for payload, like in zip(payloads, likes):
-            codes = self._unpack(payload["codes"]) if self.packed else payload["codes"]
+            codes = unpack_codes(payload["codes"], bits=self.bits) \
+                if self.packed else payload["codes"]
             outs.append(_dequantize_nd(codes, payload["scale"], bits=self.bits,
                                        orig_last=like.shape[-1], dtype=like.dtype))
         return jax.tree_util.tree_unflatten(treedef, outs)
 
     def wire_bits_per_element(self) -> float:
-        bits = 4.0 if self.packed else float(self.bits)
-        return bits + 32.0 / self.block
+        """Asymptotic wire bits/element for leaves whose last dim fills whole
+        blocks: the packed-word container amortizes to exactly ``bits``, any
+        unpacked width rides a full int8 byte, plus the per-block fp32 scale.
+        Leaves with last dim < ``block`` shrink their block and pay more scale
+        overhead — use :meth:`payload_nbytes` for the measured per-tree number
+        (the dryrun records that, not this)."""
+        container = float(self.bits) if self.packed else 8.0
+        return container + 32.0 / self.block
+
+    def payload_nbytes(self, tree: Any) -> int:
+        """Measured wire bytes of one encoded gossip payload for ``tree``
+        (shape-only: evaluated via eval_shape, nothing is computed)."""
+        payloads = jax.eval_shape(
+            lambda t: self.encode(t, jnp.zeros((), jnp.int32), salt=0)[1], tree)
+        return _payload_nbytes(payloads)
 
 
 def _roll(tree: Any, shift: int) -> Any:

@@ -2,8 +2,16 @@
 
 Handles: arbitrary input shapes (flatten/pad to the 2-D blocked view), PRNG-key ->
 seed derivation, interpret-mode fallback on non-TPU backends, and payloads in the
-same wire format as :class:`repro.core.compression.RandomQuantizer` (``codes`` int8
-``(n_blocks, block_size)`` + ``scale`` f32 ``(n_blocks, 1)``).
+same wire format as :class:`repro.core.compression.RandomQuantizer`:
+
+* ``bits=8`` (and any non-packable width): ``codes`` int8 ``(n_blocks, block_size)``
+  + ``scale`` f32 ``(n_blocks, 1)``.
+* ``bits in {2, 4}``: ``codes`` **uint32** ``(n_blocks, block_size*bits/32)``
+  (bit-packed words, planar layout — see kernels/quant.py) + ``scale``.
+
+The payload's ``codes.dtype`` is therefore self-describing: uint32 means packed.
+``payload_nbytes`` is the honest wire cost used by the netsim cost model and the
+benchmarks.
 """
 from __future__ import annotations
 
@@ -28,18 +36,63 @@ def _to_blocks(x: jax.Array, block_size: int) -> jax.Array:
     return flat.reshape(-1, block_size)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block_size"))
-def quantize(key: jax.Array, x: jax.Array, *, bits: int = 8, block_size: int = 1024) -> dict:
-    """Stochastic-quantize any-shaped ``x`` into {codes:int8, scale:f32} payload."""
+def payload_nbytes(payload: Any) -> int:
+    """Total wire bytes of a payload pytree (works on arrays or ShapeDtypeStructs)."""
+    return sum(
+        int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+        for l in jax.tree.leaves(payload)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_size", "pack"))
+def quantize(key: jax.Array, x: jax.Array, *, bits: int = 8, block_size: int = 1024,
+             pack: bool | None = None) -> dict:
+    """Stochastic-quantize any-shaped ``x`` into a {codes, scale} payload.
+
+    For ``bits in {2, 4}`` (and ``pack`` not explicitly False) the codes come
+    out of the fused quantize+pack kernel as uint32 words — the payload is the
+    packed wire format, ``bits + 32/block`` bits per element on the wire.
+    """
     assert block_size % 128 == 0
+    packed = bits in _q.PACKABLE_BITS if pack is None else pack
+    assert not packed or bits in _q.PACKABLE_BITS, \
+        f"packable bits are {_q.PACKABLE_BITS}, got {bits}"
     seed = jax.random.bits(key, (1,), dtype=jnp.uint32)
     blocks = _to_blocks(x, block_size)
-    codes, scale = _q.quantize_2d(blocks, seed, bits=bits, interpret=_interpret())
+    if packed:
+        codes, scale = _q.quantize_pack_2d(blocks, seed, bits=bits, interpret=_interpret())
+    else:
+        codes, scale = _q.quantize_2d(blocks, seed, bits=bits, interpret=_interpret())
     return {"codes": codes, "scale": scale}
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "shape", "dtype"))
 def dequantize(payload: dict, *, bits: int = 8, shape: tuple = (), dtype: Any = jnp.float32) -> jax.Array:
-    out = _q.dequantize_2d(payload["codes"], payload["scale"], bits=bits, interpret=_interpret())
+    if payload["codes"].dtype == jnp.uint32:
+        out = _q.unpack_dequant_2d(payload["codes"], payload["scale"], bits=bits,
+                                   interpret=_interpret())
+    else:
+        out = _q.dequantize_2d(payload["codes"], payload["scale"], bits=bits,
+                               interpret=_interpret())
     n = int(np.prod(shape)) if shape else 1
     return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "weight"))
+def dequant_axpy(payload: dict, acc: jax.Array, *, bits: int, weight: float) -> jax.Array:
+    """Fused receive path: ``acc + weight * dequantize(payload)``, acc-shaped.
+
+    For packed payloads this is one kernel — unpack, dequantize and accumulate
+    in VMEM, never writing the reconstructed fp32 tensor to HBM.
+    """
+    packed = payload["codes"].dtype == jnp.uint32
+    block_size = payload["codes"].shape[-1] * (32 // bits if packed else 1)
+    blocks = _to_blocks(acc, block_size)
+    if packed:
+        out = _q.unpack_dequant_axpy_2d(payload["codes"], payload["scale"], blocks,
+                                        bits=bits, weight=weight, interpret=_interpret())
+    else:
+        out = blocks + weight * _q.dequantize_2d(payload["codes"], payload["scale"],
+                                                 bits=bits, interpret=_interpret())
+    n = acc.size
+    return out.reshape(-1)[:n].reshape(acc.shape).astype(acc.dtype)

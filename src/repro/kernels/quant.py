@@ -1,14 +1,36 @@
-"""Pallas TPU kernel: fused per-block max-abs scaling + stochastic int8 quantization.
+"""Pallas TPU kernels: fused per-block scaling + stochastic quantization + bit-pack.
 
 This is the compute hot-spot the paper's technique adds to the training step: every
-gossip round quantizes the full model-delta (up to tens of GB across the node).  The
-kernel fuses, in one VMEM pass over the tensor:
+gossip round quantizes the full model-delta (up to tens of GB across the node).  Two
+kernel families share one VMEM pass over the tensor:
 
-    scale = max|block| -> normalize -> stochastic round -> int8 codes
+* ``quantize_2d``      — scale = max|block| -> normalize -> stochastic round ->
+  **int8** codes (the ``bits=8`` container; also serves 3..7-bit levels, which
+  still ship one byte per element).
+* ``quantize_pack_2d`` — same pipeline, then **bit-packs** the codes into
+  ``uint32`` words before they ever leave VMEM: 8x4-bit or 16x2-bit codes per
+  word, so the HBM write (and the wire payload built from it) is ``bits``/32 of
+  fp32 — the paper's compression ratio as actual bytes, not a formula.
 
-so the fp32 tensor is read from HBM exactly once and only int8 codes + per-block
-scales are written back (a ~3.8x HBM-write reduction vs. the unfused jnp path,
-which materializes the normalized fp32 tensor between ops).
+Receive side mirrors it: ``unpack_dequant_2d`` (unpack -> dequantize) and
+``unpack_dequant_axpy_2d`` (unpack -> dequantize -> ``acc + w * value``), which
+fuses the neighbor-mix accumulation so the reconstructed fp32 neighbor tensor is
+never materialized in HBM before the gossip average.
+
+Packed wire format (shared with kernels/ref.py and the WireCodec in
+distributed/decentralized.py -- all three produce identical words):
+
+    cpw  = 32 // bits            # codes per uint32 word (8 @ 4-bit, 16 @ 2-bit)
+    W    = cols // cpw           # words per row of ``cols`` codes
+    u    = code + levels + 1     # bias signed [-L, L] -> unsigned [1, 2L+1]
+    word[w] = OR_k  u[w + k*W] << (k * bits)      for k in 0..cpw-1
+
+i.e. a *planar* layout: bit-plane ``k`` of every word is the contiguous lane
+slice ``u[k*W : (k+1)*W]``.  Planar (rather than interleaving adjacent codes)
+keeps every pack/unpack step a static contiguous lane slice — no strided lane
+gathers, which the TPU VPU cannot do cheaply.  ``cols`` must be a multiple of
+``cpw``; with the default ``block_size=1024`` at 4 bits, W = 128 = one full
+lane register per row.
 
 TPU adaptation notes (vs. a CUDA quantizer):
 * Blocks are *rows* of a (rows, block_size) view with block_size a multiple of 128
@@ -18,8 +40,11 @@ TPU adaptation notes (vs. a CUDA quantizer):
   (``pltpu.prng_random_bits`` has no CPU lowering, and a counter-based generator
   vectorizes better than threading PRNG state through the grid anyway).
 * The row-max reduction stays in VMEM registers; scales land in a (rows, 1) output.
+* Pack/unpack is shift-and-OR over the biased codes — pure VPU integer ops on
+  lane-aligned slices, fused into the same grid step as the quantize/dequantize.
 
-Validated against kernels/ref.py (pure jnp, same hash) in tests/test_kernels.py.
+Validated against kernels/ref.py (pure jnp, same hash, same word layout) in
+tests/test_kernels.py.
 """
 from __future__ import annotations
 
@@ -28,6 +53,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+PACKABLE_BITS = (2, 4)
 
 
 def pcg_hash(x: jax.Array) -> jax.Array:
@@ -44,9 +71,11 @@ def uniform_from_hash(idx: jax.Array, seed: jax.Array) -> jax.Array:
     return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
-def _quant_kernel(seed_ref, x_ref, codes_ref, scale_ref, *, levels: int, block_rows: int, cols: int):
-    pid = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)
+def _stochastic_codes(x, seed_ref, pid, *, levels: int, block_rows: int, cols: int):
+    """Shared head of both quantize kernels: scale, normalize, stochastic round.
+
+    Returns (float codes in [-levels, levels], per-row scale).
+    """
     scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)
     safe = jnp.where(scale > 0.0, scale, 1.0)
     v = x * (jnp.float32(levels) / safe)
@@ -58,13 +87,59 @@ def _quant_kernel(seed_ref, x_ref, codes_ref, scale_ref, *, levels: int, block_r
 
     floor = jnp.floor(v)
     q = floor + (u < (v - floor)).astype(jnp.float32)
-    codes_ref[...] = jnp.clip(q, -levels, levels).astype(jnp.int8)
+    return jnp.clip(q, -levels, levels), scale
+
+
+def _quant_kernel(seed_ref, x_ref, codes_ref, scale_ref, *, levels: int, block_rows: int, cols: int):
+    x = x_ref[...].astype(jnp.float32)
+    q, scale = _stochastic_codes(x, seed_ref, pl.program_id(0),
+                                 levels=levels, block_rows=block_rows, cols=cols)
+    codes_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _quant_pack_kernel(seed_ref, x_ref, packed_ref, scale_ref, *,
+                       bits: int, levels: int, block_rows: int, cols: int):
+    x = x_ref[...].astype(jnp.float32)
+    q, scale = _stochastic_codes(x, seed_ref, pl.program_id(0),
+                                 levels=levels, block_rows=block_rows, cols=cols)
+    u = (q + jnp.float32(levels + 1)).astype(jnp.uint32)   # biased, in [1, 2L+1]
+    cpw = 32 // bits
+    w = cols // cpw
+    word = u[:, 0:w]
+    for k in range(1, cpw):
+        word = word | (u[:, k * w:(k + 1) * w] << jnp.uint32(k * bits))
+    packed_ref[...] = word
     scale_ref[...] = scale
 
 
 def _dequant_kernel(codes_ref, scale_ref, out_ref, *, levels: int):
     q = codes_ref[...].astype(jnp.float32)
     out_ref[...] = q * (scale_ref[...] * jnp.float32(1.0 / levels))
+
+
+def _unpack_dequant_kernel(packed_ref, scale_ref, out_ref, *, bits: int, levels: int):
+    word = packed_ref[...]
+    inv = scale_ref[...] * jnp.float32(1.0 / levels)
+    cpw = 32 // bits
+    w = word.shape[-1]
+    mask = jnp.uint32((1 << bits) - 1)
+    for k in range(cpw):
+        u = ((word >> jnp.uint32(k * bits)) & mask).astype(jnp.int32) - (levels + 1)
+        out_ref[:, k * w:(k + 1) * w] = u.astype(jnp.float32) * inv
+
+
+def _unpack_dequant_axpy_kernel(packed_ref, scale_ref, acc_ref, out_ref, *,
+                                bits: int, levels: int, weight: float):
+    word = packed_ref[...]
+    inv = scale_ref[...] * jnp.float32(weight / levels)
+    cpw = 32 // bits
+    w = word.shape[-1]
+    mask = jnp.uint32((1 << bits) - 1)
+    for k in range(cpw):
+        u = ((word >> jnp.uint32(k * bits)) & mask).astype(jnp.int32) - (levels + 1)
+        out_ref[:, k * w:(k + 1) * w] = (
+            acc_ref[:, k * w:(k + 1) * w] + u.astype(jnp.float32) * inv)
 
 
 def _pick_block_rows(rows: int, cols: int, vmem_budget: int = 4 << 20) -> int:
@@ -74,15 +149,20 @@ def _pick_block_rows(rows: int, cols: int, vmem_budget: int = 4 << 20) -> int:
     return max(8, (bm // 8) * 8) if rows >= 8 else rows
 
 
+def _pad_rows(arrs, bm: int, rows: int):
+    pad = (-rows) % bm
+    if pad:
+        arrs = [jnp.pad(a, ((0, pad), (0, 0))) for a in arrs]
+    return arrs, pad
+
+
 def quantize_2d(x: jax.Array, seed: jax.Array, *, bits: int, interpret: bool = False):
     """Quantize a (rows, cols) f32 array, one scale per row. cols % 128 == 0."""
     rows, cols = x.shape
     assert cols % 128 == 0, f"block_size must be a multiple of 128, got {cols}"
     levels = 2 ** (bits - 1) - 1
     bm = _pick_block_rows(rows, cols)
-    pad = (-rows) % bm
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
+    (x,), pad = _pad_rows([x], bm, rows)
     grid = ((rows + pad) // bm,)
     kernel = functools.partial(_quant_kernel, levels=levels, block_rows=bm, cols=cols)
     codes, scale = pl.pallas_call(
@@ -107,14 +187,50 @@ def quantize_2d(x: jax.Array, seed: jax.Array, *, bits: int, interpret: bool = F
     return codes, scale
 
 
+def quantize_pack_2d(x: jax.Array, seed: jax.Array, *, bits: int, interpret: bool = False):
+    """Fused quantize + bit-pack of a (rows, cols) f32 array.
+
+    Returns (packed uint32 (rows, cols*bits/32), scale f32 (rows, 1)).  The codes
+    are identical to ``quantize_2d`` for the same seed — packing is lossless —
+    but only ``bits`` per element ever leave the kernel.
+    """
+    rows, cols = x.shape
+    assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
+    assert cols % 128 == 0, f"block_size must be a multiple of 128, got {cols}"
+    levels = 2 ** (bits - 1) - 1
+    w = cols * bits // 32
+    bm = _pick_block_rows(rows, cols)
+    (x,), pad = _pad_rows([x], bm, rows)
+    grid = ((rows + pad) // bm,)
+    kernel = functools.partial(_quant_pack_kernel, bits=bits, levels=levels,
+                               block_rows=bm, cols=cols)
+    packed, scale = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows + pad, w), jnp.uint32),
+            jax.ShapeDtypeStruct((rows + pad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.uint32), x.astype(jnp.float32))
+    if pad:
+        packed, scale = packed[:rows], scale[:rows]
+    return packed, scale
+
+
 def dequantize_2d(codes: jax.Array, scale: jax.Array, *, bits: int, interpret: bool = False) -> jax.Array:
     rows, cols = codes.shape
     levels = 2 ** (bits - 1) - 1
     bm = _pick_block_rows(rows, cols)
-    pad = (-rows) % bm
-    if pad:
-        codes = jnp.pad(codes, ((0, pad), (0, 0)))
-        scale = jnp.pad(scale, ((0, pad), (0, 0)))
+    (codes, scale), pad = _pad_rows([codes, scale], bm, rows)
     grid = ((rows + pad) // bm,)
     out = pl.pallas_call(
         functools.partial(_dequant_kernel, levels=levels),
@@ -127,4 +243,60 @@ def dequantize_2d(codes: jax.Array, scale: jax.Array, *, bits: int, interpret: b
         out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
         interpret=interpret,
     )(codes, scale.astype(jnp.float32))
+    return out[:rows] if pad else out
+
+
+def unpack_dequant_2d(packed: jax.Array, scale: jax.Array, *, bits: int,
+                      interpret: bool = False) -> jax.Array:
+    """Fused unpack + dequantize: uint32 words -> f32 (rows, cols)."""
+    rows, w = packed.shape
+    assert bits in PACKABLE_BITS
+    levels = 2 ** (bits - 1) - 1
+    cols = w * 32 // bits
+    bm = _pick_block_rows(rows, cols)
+    (packed, scale), pad = _pad_rows([packed, scale], bm, rows)
+    grid = ((rows + pad) // bm,)
+    out = pl.pallas_call(
+        functools.partial(_unpack_dequant_kernel, bits=bits, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
+        interpret=interpret,
+    )(packed, scale.astype(jnp.float32))
+    return out[:rows] if pad else out
+
+
+def unpack_dequant_axpy_2d(packed: jax.Array, scale: jax.Array, acc: jax.Array, *,
+                           bits: int, weight: float, interpret: bool = False) -> jax.Array:
+    """Fused unpack + dequantize + accumulate: ``acc + weight * dequant(packed)``.
+
+    The receive side of a gossip round: the reconstructed fp32 neighbor never
+    exists in HBM — each unpacked bit-plane is scaled and added into the mix
+    accumulator while still in VMEM.
+    """
+    rows, w = packed.shape
+    assert bits in PACKABLE_BITS
+    levels = 2 ** (bits - 1) - 1
+    cols = w * 32 // bits
+    assert acc.shape == (rows, cols), (acc.shape, (rows, cols))
+    bm = _pick_block_rows(rows, cols)
+    (packed, scale, acc), pad = _pad_rows([packed, scale, acc], bm, rows)
+    grid = ((rows + pad) // bm,)
+    out = pl.pallas_call(
+        functools.partial(_unpack_dequant_axpy_kernel, bits=bits, levels=levels,
+                          weight=float(weight)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
+        interpret=interpret,
+    )(packed, scale.astype(jnp.float32), acc.astype(jnp.float32))
     return out[:rows] if pad else out

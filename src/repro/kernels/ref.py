@@ -2,14 +2,60 @@
 
 ``quantize_2d_ref`` replicates quant.py exactly — including the counter-based PCG
 stochastic rounding — so kernel tests can assert exact equality of codes, not just
-statistical agreement.
+statistical agreement.  ``pack_codes`` / ``unpack_codes`` implement the planar
+uint32 word layout documented in kernels/quant.py; they are the *shared*
+reference codec: the distributed WireCodec and the compression operators call
+these, and the Pallas kernels are tested word-for-word against them.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.quant import pcg_hash, uniform_from_hash
+from repro.kernels.quant import PACKABLE_BITS, pcg_hash, uniform_from_hash  # noqa: F401
+
+
+def aligned_block(limit: int, n: int, *, bits: int) -> int:
+    """Block size for an ``n``-element (last-dim) leaf: shrink toward ``n`` to
+    limit padding, rounded up to a whole number of packed words so the block
+    always packs cleanly.  Shared by RandomQuantizer and WireCodec so the two
+    codecs agree on block geometry."""
+    cpw = 32 // bits
+    block = min(limit, max(n, 1))
+    return min(limit, -(-block // cpw) * cpw)
+
+
+def pack_codes(codes: jax.Array, *, bits: int) -> jax.Array:
+    """Bit-pack int8 codes in [-levels, levels] along the last dim.
+
+    (..., cols) int8 -> (..., cols*bits/32) uint32, planar layout: word ``w``
+    holds the biased codes at positions ``{w + k*W}`` in bit-field ``k*bits``.
+    ``cols`` must be a multiple of 32/bits.
+    """
+    assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
+    cpw = 32 // bits
+    levels = 2 ** (bits - 1) - 1
+    cols = codes.shape[-1]
+    assert cols % cpw == 0, f"last dim {cols} not a multiple of {cpw}"
+    w = cols // cpw
+    u = (codes.astype(jnp.int32) + (levels + 1)).astype(jnp.uint32)
+    word = u[..., 0:w]
+    for k in range(1, cpw):
+        word = word | (u[..., k * w:(k + 1) * w] << jnp.uint32(k * bits))
+    return word
+
+
+def unpack_codes(packed: jax.Array, *, bits: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`: (..., W) uint32 -> (..., W*32/bits) int8."""
+    assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
+    cpw = 32 // bits
+    levels = 2 ** (bits - 1) - 1
+    mask = jnp.uint32((1 << bits) - 1)
+    parts = [
+        ((packed >> jnp.uint32(k * bits)) & mask).astype(jnp.int32) - (levels + 1)
+        for k in range(cpw)
+    ]
+    return jnp.concatenate(parts, axis=-1).astype(jnp.int8)
 
 
 def quantize_2d_ref(x: jax.Array, seed: jax.Array, *, bits: int):
@@ -33,3 +79,18 @@ def quantize_2d_ref(x: jax.Array, seed: jax.Array, *, bits: int):
 def dequantize_2d_ref(codes: jax.Array, scale: jax.Array, *, bits: int) -> jax.Array:
     levels = 2 ** (bits - 1) - 1
     return codes.astype(jnp.float32) * (scale.astype(jnp.float32) / levels)
+
+
+def quantize_pack_2d_ref(x: jax.Array, seed: jax.Array, *, bits: int):
+    """Oracle for the fused quantize+pack kernel: quantize, then pack."""
+    codes, scale = quantize_2d_ref(x, seed, bits=bits)
+    return pack_codes(codes, bits=bits), scale
+
+
+def unpack_dequant_2d_ref(packed: jax.Array, scale: jax.Array, *, bits: int) -> jax.Array:
+    return dequantize_2d_ref(unpack_codes(packed, bits=bits), scale, bits=bits)
+
+
+def unpack_dequant_axpy_2d_ref(packed: jax.Array, scale: jax.Array, acc: jax.Array, *,
+                               bits: int, weight: float) -> jax.Array:
+    return acc.astype(jnp.float32) + weight * unpack_dequant_2d_ref(packed, scale, bits=bits)

@@ -336,6 +336,8 @@ def analyze(compiled, *, model_flops_global: float, n_chips: int,
     bodies once.  Collective bytes: while-aware HLO parse.
     """
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jaxlib: one dict per device
+        cost = cost[0] if cost else {}
     xla_flops = float(cost.get("flops", 0.0))
     if jaxpr_flops_global:
         flops = jaxpr_flops_global / n_chips

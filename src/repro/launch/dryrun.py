@@ -125,10 +125,20 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
         n_chips=n_chips, jaxpr_flops_global=jx_flops,
         pod_size=256 if multi_pod else None)
     mem = compiled.memory_analysis()
+    # wire accounting from the real payload containers (not a formula): the
+    # bytes one gossip direction actually puts on the node-axis permute
+    wire = {}
+    if codec is not None:
+        payload_bytes = codec.payload_nbytes(state_sds.params)
+        stacked_elems = _tree_size(state_sds.params)
+        wire = {
+            "wire_payload_bytes": payload_bytes,
+            "wire_bits_per_element": round(8.0 * payload_bytes / stacked_elems, 4),
+        }
     rec = {
         "arch": arch, "shape": shape_name, "kind": "train", "algo": algo, "bits": bits,
         "topology": topology, "multi_pod": multi_pod, "n_nodes": n, "n_chips": n_chips,
-        "params_total": n_total,
+        "params_total": n_total, **wire,
         "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
         "memory": {
             "argument_bytes": mem.argument_size_in_bytes,

@@ -1,4 +1,5 @@
 from repro.netsim.cost_model import (
     BEST_NETWORK, HIGH_LAT, LOW_BW, WORST,
     CommStrategy, NetworkCondition, comm_time, epoch_time, iter_time, strategies,
+    strategies_for,
 )

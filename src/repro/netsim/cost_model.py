@@ -11,7 +11,10 @@ way the paper's systems discussion does:
   ONE round: bytes = 2 * M * (wire_bits/32), latency = 2 rounds (send both
   directions concurrently => 1-2 link RTTs; we charge 2).
 * Compressed decentralized (DCD/ECD): same round structure, payload shrunk by
-  the wire ratio (8-bit codes + per-block scales ~ 8.03/32).
+  the wire ratio — which is taken from the *real* payload containers, not a
+  formula: int8 codes + per-block scales ~ 8.03/32 at 8 bits, bit-packed uint32
+  words ~ 4.03/32 at 4 bits (see ``strategies_for``, which asks the compressor
+  for its measured wire bits/element).
 
 comm_time = latency * rounds + bytes / bandwidth ;  iter_time = compute + comm.
 """
@@ -48,6 +51,13 @@ def strategies(model_bytes: float, n: int, wire_bits: float = 8.03) -> Dict[str,
         "allreduce_lp": CommStrategy("allreduce_lp", 2 * (n - 1) / n * M * wire_bits / 32,
                                      2 * (n - 1)),
     }
+
+
+def strategies_for(model_bytes: float, n: int, compressor) -> Dict[str, CommStrategy]:
+    """Strategies whose low-precision wire bits come from the compressor's
+    actual payload containers (``wire_bits_per_element`` is payload-derived for
+    the quantizer: packed uint32 words at 2/4 bits, int8 otherwise)."""
+    return strategies(model_bytes, n, wire_bits=float(compressor.wire_bits_per_element()))
 
 
 def comm_time(s: CommStrategy, net: NetworkCondition) -> float:

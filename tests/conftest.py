@@ -1,0 +1,83 @@
+"""Shared pytest configuration.
+
+Provides a minimal, deterministic fallback for the ``hypothesis`` API
+(``given`` / ``settings`` / ``strategies``) when the real package is not
+installed.  The property tests in this repo only use ``st.integers``,
+``st.floats`` and ``st.sampled_from`` with bounded ranges, so a seeded
+uniform sampler preserves their intent (a fixed sweep of randomized
+examples) without the dependency.  With real hypothesis installed (see
+requirements-dev.txt) the fallback is inert and the full engine — edge
+cases, shrinking, the example database — takes over.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def _given(**strategies):
+        def decorate(fn):
+            sig = inspect.signature(fn)
+            remaining = [p for name, p in sig.parameters.items()
+                         if name not in strategies]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(0xC0FFEE + 7919 * i)
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # pytest must not see the drawn parameters as fixture requests
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return decorate
+
+    def _settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__is_fallback__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -7,7 +7,13 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.kernels.quant import quantize_2d, dequantize_2d
+from repro.kernels.quant import (
+    dequantize_2d,
+    quantize_2d,
+    quantize_pack_2d,
+    unpack_dequant_2d,
+    unpack_dequant_axpy_2d,
+)
 
 
 @pytest.mark.parametrize("bits", [2, 4, 8])
@@ -83,3 +89,105 @@ def test_kernel_property_sweep(rows, cols, bits, seed):
     np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
     np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-7)
     assert ck.shape == (rows, cols) and sk.shape == (rows, 1)
+
+
+# ------------------------------------------------------- packed wire format
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_pack_unpack_roundtrip_all_code_values(bits):
+    """Every representable code survives pack -> unpack exactly."""
+    levels = 2 ** (bits - 1) - 1
+    cpw = 32 // bits
+    vals = np.arange(-levels, levels + 1, dtype=np.int8)
+    # tile them through every position within a word (and a few words)
+    cols = 4 * cpw
+    codes = jnp.asarray(np.resize(vals, (3, cols)))
+    packed = kref.pack_codes(codes, bits=bits)
+    assert packed.dtype == jnp.uint32 and packed.shape == (3, cols // cpw)
+    np.testing.assert_array_equal(
+        np.asarray(kref.unpack_codes(packed, bits=bits)), np.asarray(codes))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("shape", [(8, 128), (64, 1024), (9, 128), (3, 256), (1, 128)])
+def test_quant_pack_kernel_matches_ref_exactly(bits, shape):
+    """Fused quantize+pack kernel words == oracle words, bit-for-bit; unpacking
+    them recovers exactly the codes of the unpacked kernel (lossless)."""
+    x = jax.random.normal(jax.random.key(7), shape, dtype=jnp.float32) * 2.0
+    seed = jnp.asarray([99], dtype=jnp.uint32)
+    pk, sk = quantize_pack_2d(x, seed, bits=bits, interpret=True)
+    pr, sr = kref.quantize_pack_2d_ref(x, seed, bits=bits)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-7)
+    codes, _ = quantize_2d(x, seed, bits=bits, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(kref.unpack_codes(pk, bits=bits)), np.asarray(codes))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_unpack_dequant_kernels_match_ref(bits):
+    x = jax.random.normal(jax.random.key(1), (37, 256)) * 0.7
+    seed = jnp.asarray([5], dtype=jnp.uint32)
+    packed, scale = kref.quantize_pack_2d_ref(x, seed, bits=bits)
+    out_k = unpack_dequant_2d(packed, scale, bits=bits, interpret=True)
+    out_r = kref.unpack_dequant_2d_ref(packed, scale, bits=bits)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+    acc = jax.random.normal(jax.random.key(2), x.shape)
+    ax_k = unpack_dequant_axpy_2d(packed, scale, acc, bits=bits, weight=1 / 3,
+                                  interpret=True)
+    ax_r = kref.unpack_dequant_axpy_2d_ref(packed, scale, acc, bits=bits, weight=1 / 3)
+    np.testing.assert_allclose(np.asarray(ax_k), np.asarray(ax_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("shape", [(100,), (5, 7, 11), (2048,), (1, 1), (1023,)])
+def test_ops_packed_roundtrip_any_shape(bits, shape):
+    """Packed payloads roundtrip odd / non-multiple-of-word sizes."""
+    x = jax.random.normal(jax.random.key(3), shape) * 2
+    payload = kops.quantize(jax.random.key(4), x, bits=bits, block_size=128)
+    assert payload["codes"].dtype == jnp.uint32
+    out = kops.dequantize(payload, bits=bits, shape=shape)
+    assert out.shape == shape
+    levels = 2 ** (bits - 1) - 1
+    bin_w = float(np.asarray(payload["scale"]).max()) / levels
+    assert float(jnp.max(jnp.abs(out - x))) <= bin_w * 1.01 + 1e-6
+
+
+def test_ops_dequant_axpy_matches_unfused():
+    x = jax.random.normal(jax.random.key(5), (777,))
+    acc = jax.random.normal(jax.random.key(6), (777,))
+    for bits in (2, 4, 8):
+        p = kops.quantize(jax.random.key(7), x, bits=bits, block_size=128)
+        got = kops.dequant_axpy(p, acc, bits=bits, weight=0.25)
+        want = acc + 0.25 * kops.dequantize(p, bits=bits, shape=x.shape)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_packed_payload_measured_wire_bits():
+    """bits=4, block=1024: the payload ships <= 4.1 bits/element (measured)."""
+    n = 1 << 16
+    p = kops.quantize(jax.random.key(0), jnp.ones((n,)), bits=4, block_size=1024)
+    assert 8.0 * kops.payload_nbytes(p) / n <= 4.1
+    assert (n * 4) / kops.payload_nbytes(p) >= 7.8   # >= 7.8x vs fp32
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 120),
+    cols=st.sampled_from([128, 256, 512]),
+    bits=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_packed_kernel_property_sweep(rows, cols, bits, seed):
+    """Property: fused pack kernel == oracle for arbitrary row counts."""
+    x = jax.random.normal(jax.random.key(seed), (rows, cols)) * 10
+    s = jnp.asarray([seed], dtype=jnp.uint32)
+    pk, sk = quantize_pack_2d(x, s, bits=bits, interpret=True)
+    pr, sr = kref.quantize_pack_2d_ref(x, s, bits=bits)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-7)
+    assert pk.shape == (rows, cols * bits // 32) and pk.dtype == jnp.uint32

@@ -58,3 +58,19 @@ def test_comm_time_monotone_in_latency():
     t1 = comm_time(s, NetworkCondition(1e9, 1e-4))
     t2 = comm_time(s, NetworkCondition(1e9, 1e-2))
     assert t2 > t1
+
+
+def test_strategies_for_uses_measured_payload_bits():
+    """strategies_for derives lp bytes from the compressor's real containers:
+    packed 4-bit halves the 8-bit payload; '3-bit' honestly costs its int8
+    container, not 3 bits."""
+    from repro.core.compression import RandomQuantizer
+    from repro.netsim import strategies_for
+
+    M = RESNET20_BYTES
+    lp8 = strategies_for(M, 8, RandomQuantizer(bits=8, block_size=1024))["decentralized_lp"]
+    lp4 = strategies_for(M, 8, RandomQuantizer(bits=4, block_size=1024))["decentralized_lp"]
+    lp3 = strategies_for(M, 8, RandomQuantizer(bits=3, block_size=1024))["decentralized_lp"]
+    assert lp4.bytes_per_iter == pytest.approx(2 * M * 4.03125 / 32)
+    assert lp4.bytes_per_iter == pytest.approx(0.5 * lp8.bytes_per_iter, rel=1e-2)
+    assert lp3.bytes_per_iter == pytest.approx(lp8.bytes_per_iter)  # int8 container
