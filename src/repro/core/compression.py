@@ -19,13 +19,15 @@ Each operator exposes the *wire format* explicitly (``compress`` -> payload pytr
 payload — not the fp32 tensor — on the network, and ``wire_bits_per_element`` so the
 network cost model and the roofline analysis can account for it.
 
-For the quantizer the wire format is *real*, not modeled: 2- and 4-bit codes are
-bit-packed into uint32 words (8x4-bit / 16x2-bit per word, the planar layout of
-kernels/quant.py), while 8-bit and odd widths ship one int8 per element — so a
-"3-bit" quantizer honestly reports ~8 wire bits/element, since that is what its
-int8 container actually ships.  ``wire_bits_per_element`` is derived from the
-payload's container sizes via ``jax.eval_shape`` on ``compress`` (model ==
-measured by construction; asserted in tests/test_compression.py).
+For the quantizer the wire format is *real*, not modeled: every width 2..7 is
+bit-packed into uint32 words via the bit-exact stream layout of
+kernels/quant.py (codes straddle word boundaries, so 3-bit really ships ~3
+wire bits/element — the paper's low-bit sweet spot), while 8-bit ships its
+int8 container.  ``wire_bits_per_element`` is derived from the payload's
+container sizes via ``jax.eval_shape`` on ``compress`` (model == measured by
+construction; asserted in tests/test_compression.py).  The sparsifier's figure
+is the one *modeled* exception — flagged via ``wire_is_modeled`` so the cost
+model and dry-run reports can say so.
 
 All operators are pure functions of a PRNG key: jit/vmap/shard_map friendly.
 """
@@ -41,8 +43,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import payload_nbytes
-from repro.kernels.quant import PACKABLE_BITS
-from repro.kernels.ref import aligned_block, pack_codes, unpack_codes
+from repro.kernels.ref import (
+    aligned_block,
+    assert_packable,
+    pack_codes,
+    packed_auto,
+    unpack_codes,
+)
 
 Payload = Any  # pytree of arrays
 
@@ -72,6 +79,12 @@ class Compressor:
 
     def wire_bits_per_element(self, shape=None) -> float:
         raise NotImplementedError
+
+    @property
+    def wire_is_modeled(self) -> bool:
+        """True when ``wire_bits_per_element`` is an *idealized model* rather
+        than the measured nbytes of the in-memory payload containers."""
+        return False
 
     # --- pytree helpers -------------------------------------------------
     def tree_apply(self, key: jax.Array, tree: Any) -> Any:
@@ -129,10 +142,11 @@ class RandomQuantizer(Compressor):
     ``E[q * s / L] = v`` — unbiased by construction.
 
     Wire format: one fp32 scale per ``block_size`` elements, plus the codes in
-    their *actual* container — bit-packed uint32 words for ``bits in {2, 4}``
-    (``pack=None`` default; 8 or 16 codes per word), int8 otherwise.  Packing is
-    lossless on the codes, so the operator's distribution is identical packed or
-    not; only the bytes on the wire change.
+    their *actual* container — bit-packed uint32 words for ``bits in 2..7``
+    (``pack=None`` default; bit-exact stream layout, codes straddle word
+    boundaries), int8 at 8 bits.  Packing is lossless on the codes, so the
+    operator's distribution is identical packed or not; only the bytes on the
+    wire change.
 
     ``use_kernel=True`` routes through the Pallas TPU kernels (kernels/quant.py,
     fused quantize+pack); the default pure-jnp path is the reference semantics
@@ -147,17 +161,17 @@ class RandomQuantizer(Compressor):
 
     def __post_init__(self):
         assert 2 <= self.bits <= 8, "2..8-bit levels supported"
-        if self.pack:
-            assert self.bits in PACKABLE_BITS, \
-                f"packable bits are {PACKABLE_BITS}, got {self.bits}"
-        if self.packed:
-            cpw = 32 // self.bits
-            assert self.block_size % cpw == 0, \
-                f"packed {self.bits}-bit needs block_size % {cpw} == 0"
+        if self.pack:   # explicit request: the geometry must support it
+            assert_packable(self.bits, self.block_size)
 
     @property
     def packed(self) -> bool:
-        return self.bits in PACKABLE_BITS if self.pack is None else self.pack
+        """Auto mode (``pack=None``) packs whenever the block geometry allows
+        it — a block that is not a whole number of stream groups (e.g. 3-bit
+        with block_size 16 < 32 codes/group) falls back to the int8 container,
+        honestly reported by the measured ``wire_bits_per_element``."""
+        return packed_auto(self.bits, self.block_size) if self.pack is None \
+            else self.pack
 
     @property
     def levels(self) -> int:
@@ -193,7 +207,7 @@ class RandomQuantizer(Compressor):
         q = payload["codes"]
         if q.dtype == jnp.uint32:  # packed wire format is self-describing
             q = unpack_codes(q, bits=self.bits)
-        blocks = q.astype(jnp.float32) * (payload["scale"] / self.levels)
+        blocks = q.astype(jnp.float32) * (payload["scale"] * jnp.float32(1.0 / self.levels))
         flat = blocks.reshape(-1)
         n = int(np.prod(like.shape)) if like.shape else 1
         return flat[:n].reshape(like.shape).astype(like.dtype)
@@ -235,6 +249,10 @@ class RandomSparsifier(Compressor):
         # in-memory payload is dense fp32 (sharding-friendly); a real sparse
         # wire codec is an open item in ROADMAP.md.
         return self.p * 64.0
+
+    @property
+    def wire_is_modeled(self) -> bool:
+        return True
 
     def alpha_bound(self) -> float:
         # E||C(z)-z||² = (1/p - 1)||z||²  => alpha = sqrt(1/p - 1)

@@ -31,8 +31,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import payload_nbytes as _payload_nbytes
-from repro.kernels.quant import PACKABLE_BITS, uniform_from_hash
-from repro.kernels.ref import aligned_block, pack_codes, unpack_codes
+from repro.kernels.quant import uniform_from_hash, unpack_dequant_axpy_2d
+from repro.kernels.ref import (
+    aligned_block,
+    assert_packable,
+    pack_codes,
+    packed_auto,
+    unpack_codes,
+)
 from repro.optim.optimizers import Optimizer, apply_updates
 
 
@@ -73,7 +79,8 @@ def _quantize_nd(x: jax.Array, seed: jax.Array, *, bits: int, block: int):
 def _dequantize_nd(codes: jax.Array, scale: jax.Array, *, bits: int,
                    orig_last: int, dtype) -> jax.Array:
     levels = 2 ** (bits - 1) - 1
-    vals = codes.astype(jnp.float32) * (scale / levels)
+    # reciprocal multiply == the kernels' dequant formulation (see kernels/ref.py)
+    vals = codes.astype(jnp.float32) * (scale * jnp.float32(1.0 / levels))
     out = vals.reshape(*vals.shape[:-2], vals.shape[-2] * vals.shape[-1])
     return out[..., :orig_last].astype(dtype)
 
@@ -84,14 +91,15 @@ def _dequantize_nd(codes: jax.Array, scale: jax.Array, *, bits: int,
 class WireCodec:
     """Quantized wire format for one pytree, vmapped over the node axis.
 
-    ``pack=True`` (default for bits in {2, 4}) bit-packs the codes into uint32
-    words *before* the collective-permute — 8x4-bit or 16x2-bit codes per word,
-    using the planar layout shared with the Pallas kernels (kernels/quant.py)
-    and the jnp reference codec (kernels/ref.py).  The stacked payload that
-    ``jnp.roll`` moves over the node axis is therefore the packed words + the
-    per-block scales: a ``bits=4`` ring step ships ~4.03 bits/element, the
-    paper's compression ratio as actual wire bytes (the paper's own MPI
-    implementation sent one value per byte even at 4 bits).
+    ``pack=True`` (default for bits in 2..7) bit-packs the codes into uint32
+    words *before* the collective-permute using the bit-exact stream layout
+    shared with the Pallas kernels (kernels/quant.py) and the jnp reference
+    codec (kernels/ref.py): codes straddle word boundaries, so *every* width
+    ships exactly ``bits`` wire bits/element plus the per-block scale.  The
+    stacked payload that ``jnp.roll`` moves over the node axis is therefore
+    the packed words + scales: a ``bits=3`` ring step ships ~3.03
+    bits/element — the paper's low-bit sweet spot as actual wire bytes (the
+    paper's own MPI implementation sent one value per byte even at 4 bits).
 
     Packing is along the last (block) dim only, so it preserves the leaf's
     leading-dim sharding exactly like ``_quantize_nd`` does.
@@ -102,17 +110,15 @@ class WireCodec:
     pack: Optional[bool] = None
 
     def __post_init__(self):
-        if self.pack:
-            assert self.bits in PACKABLE_BITS, \
-                f"packable bits are {PACKABLE_BITS}, got {self.bits}"
-        if self.packed:
-            cpw = 32 // self.bits
-            assert self.block % cpw == 0, \
-                f"packed {self.bits}-bit needs block % {cpw} == 0"
+        if self.pack:   # explicit request: the geometry must support it
+            assert_packable(self.bits, self.block)
 
     @property
     def packed(self) -> bool:
-        return self.bits in PACKABLE_BITS if self.pack is None else self.pack
+        """Auto mode (``pack=None``) packs whenever the block geometry allows
+        it; a block that is not a whole number of stream groups falls back to
+        the int8 container (honest ~8 measured wire bits)."""
+        return packed_auto(self.bits, self.block) if self.pack is None else self.pack
 
     def _block_for(self, last: int) -> int:
         if self.packed:
@@ -162,6 +168,92 @@ class WireCodec:
         payloads = jax.eval_shape(
             lambda t: self.encode(t, jnp.zeros((), jnp.int32), salt=0)[1], tree)
         return _payload_nbytes(payloads)
+
+    def decode_axpy(self, treedef, payloads, acc_tree: Any, weight,
+                    acc_weight=1.0) -> Any:
+        """``acc_weight * acc + weight * decode(payloads)`` leafwise, as ONE
+        fused Pallas kernel per leaf (packed codecs): unpack -> dequantize ->
+        scale-and-accumulate in a single VMEM pass, so neither the
+        reconstructed fp32 neighbor tensor nor a pre-scaled accumulator ever
+        lands in HBM.  Both weights may be floats or traced scalars (ECD's
+        1-2/s decay and 2/s blend).  Falls back to decode + axpy in jnp for
+        unpacked codecs.  Output leaves keep ``acc``'s dtypes (matching the
+        reference ``(acc_weight*acc + weight*decoded).astype(acc.dtype)``)."""
+        accs = jax.tree_util.tree_leaves(acc_tree)
+        outs = []
+        for payload, acc in zip(payloads, accs):
+            # the kernel's lane contract is block % 128 == 0 (quant.py); small
+            # leaves whose aligned block shrank below that (e.g. an 8-wide
+            # bias) take the jnp path — negligible traffic, and Mosaic never
+            # sees an off-contract tile on real TPUs
+            block = payload["codes"].shape[-1] * 32 // self.bits \
+                if self.packed else payload["codes"].shape[-1]
+            if self.packed and block % 128 == 0:
+                outs.append(_fused_axpy_leaf(payload["codes"], payload["scale"],
+                                             acc, bits=self.bits, weight=weight,
+                                             acc_weight=acc_weight))
+            else:
+                codes = unpack_codes(payload["codes"], bits=self.bits) \
+                    if self.packed else payload["codes"]
+                d = _dequantize_nd(codes, payload["scale"],
+                                   bits=self.bits, orig_last=acc.shape[-1],
+                                   dtype=jnp.float32)
+                outs.append((acc_weight * acc + weight * d).astype(acc.dtype))
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def _fused_axpy_leaf(codes: jax.Array, scale: jax.Array, acc: jax.Array, *,
+                     bits: int, weight, acc_weight=1.0) -> jax.Array:
+    """One leaf of :meth:`WireCodec.decode_axpy` through the fused kernel.
+
+    codes (lead..., nblk, W) uint32 + scale (lead..., nblk, 1) -> folded into a
+    (lead*nblk, block) 2-D view for the kernel; the leading (node) axis stays
+    outermost, so the fold preserves leading-dim sharding under shard_map."""
+    block = codes.shape[-1] * 32 // bits
+    nblk = codes.shape[-2]
+    lead = acc.shape[:-1]
+    orig_last = acc.shape[-1]
+    accf = acc.astype(jnp.float32)
+    pad = nblk * block - orig_last
+    if pad:
+        accf = jnp.pad(accf, [(0, 0)] * (accf.ndim - 1) + [(0, pad)])
+    rows = int(np.prod(lead, dtype=np.int64)) * nblk
+    out = unpack_dequant_axpy_2d(
+        codes.reshape(rows, codes.shape[-1]),
+        scale.reshape(rows, 1),
+        accf.reshape(rows, block),
+        bits=bits, weight=weight, acc_weight=acc_weight,
+        interpret=jax.default_backend() != "tpu")
+    out = out.reshape(*lead, nblk * block)[..., :orig_last]
+    return out.astype(acc.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCompressor:
+    """Adapter: the stacked reference algorithms in :mod:`repro.core.algorithms`
+    driven by a :class:`WireCodec`'s deterministic PCG quantization.
+
+    The reference steps call ``comp.tree_apply(key, tree)``; here the ``key``
+    slot carries the *step counter* of the matching sharded run, so both runs
+    derive identical per-leaf seeds (step, salt, leaf index) and produce
+    bit-identical codes.  The differential test tier pins the sharded DCD/ECD
+    runtime against the stacked semantics through this adapter.
+    """
+
+    codec: WireCodec
+    salt: int
+    name: str = "wire"
+
+    def tree_apply(self, key, tree: Any) -> Any:
+        step = jnp.asarray(key).astype(jnp.int32).reshape(())
+        treedef, payloads = self.codec.encode(tree, step, salt=self.salt)
+        return self.codec.decode(treedef, payloads, tree)
+
+    def __call__(self, key, x: jax.Array) -> jax.Array:
+        return jax.tree_util.tree_leaves(self.tree_apply(key, [x]))[0]
+
+    def wire_bits_per_element(self, shape=None) -> float:
+        return self.codec.wire_bits_per_element()
 
 
 def _roll(tree: Any, shift: int) -> Any:
@@ -257,6 +349,41 @@ def init_dist_state(algo: str, params_single: Any, n_nodes: int, opt: Optimizer,
 
 # --------------------------------------------------------------- the step
 
+def _make_decode_axpy(codec: WireCodec, mesh) -> Optional[Callable]:
+    """Fused receive path, wrapped in shard_map over the node axis when a mesh
+    is given.  Each shard hands its local slab of the stacked payload (codes +
+    scales) and accumulator straight to the fused Pallas kernel.
+
+    Returns ``None`` for meshes with axes beyond "node": wrapping only the
+    node axis would force GSPMD to gather every fsdp/model-sharded leaf at the
+    shard_map boundary (the §Perf-iteration-3 regression this runtime exists
+    to avoid), and shard_map's ``auto`` escape hatch for the remaining axes
+    check-fails inside XLA's SPMD partitioner on the current pin — the caller
+    then keeps the sharding-preserving jnp reference codec (an open ROADMAP
+    item tracks lifting this once ``auto`` is usable).
+    """
+    if mesh is None or "node" not in getattr(mesh, "axis_names", ()):
+        return codec.decode_axpy
+    if any(a != "node" for a in mesh.axis_names):
+        return None
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def dec_axpy(treedef, payloads, acc_tree, weight, acc_weight=1.0):
+        def inner(payloads_, acc_, w_, aw_):
+            return codec.decode_axpy(treedef, payloads_, acc_, w_, aw_)
+
+        return shard_map(
+            inner, mesh,
+            in_specs=(P("node"), P("node"), P(), P()),
+            out_specs=P("node"), check_rep=False,
+        )(payloads, acc_tree, jnp.asarray(weight, jnp.float32),
+          jnp.asarray(acc_weight, jnp.float32))
+
+    return dec_axpy
+
+
 def make_dist_train_step(
     loss_fn: Callable[[Any, Any], Tuple[jax.Array, Dict]],
     algo: str,
@@ -265,6 +392,9 @@ def make_dist_train_step(
     n_nodes: int,
     lr_schedule: Callable[[jax.Array], jax.Array],
     topology: str = "ring",
+    *,
+    mesh: Optional[Any] = None,
+    fused: Optional[bool] = None,
 ):
     """Build ``step(state, batch) -> (state, metrics)``.
 
@@ -272,9 +402,32 @@ def make_dist_train_step(
     stacked node axis.  ``batch`` leaves are (n, per_node_batch, ...).
     ``topology``: gossip graph — "ring" (2 neighbors) or "torus" (4 neighbors,
     better spectral gap at large n at 2x the payload rounds).
+
+    ``fused`` (default: auto — on iff the codec packs) routes every DCD/ECD
+    receive-side decode through the fused ``unpack_dequant_axpy`` Pallas kernel
+    (one VMEM pass: unpack -> dequantize -> accumulate) instead of the jnp
+    reference codec + XLA fusion.  When ``mesh`` (a pure node-axis mesh) is
+    given, the fused decode runs under ``shard_map`` so each shard feeds its
+    local payload slab straight into the kernel; without a mesh the kernel is
+    called inline (single-process runs).  Multi-axis meshes fall back to the
+    reference codec — see :func:`_make_decode_axpy`.
     """
     assert algo in ("cpsgd", "dpsgd", "naive", "dcd", "ecd")
     w_s, shifts = gossip_shifts(topology, n_nodes)
+    use_fused = (codec is not None and codec.packed) if fused is None else bool(fused)
+
+    dec_axpy = None
+    if codec is not None and use_fused:
+        dec_axpy = _make_decode_axpy(codec, mesh)
+    if codec is not None and dec_axpy is None:
+        def dec_axpy(treedef, payloads, acc_tree, weight, acc_weight=1.0):
+            # reference path: decode at f32 (like the fused kernel), then axpy
+            likes = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), acc_tree)
+            dec = codec.decode(treedef, payloads, likes)
+            return jax.tree.map(
+                lambda a, d: (acc_weight * a + weight * d).astype(a.dtype),
+                acc_tree, dec)
 
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn, has_aux=True), spmd_axis_name="node")
 
@@ -308,12 +461,11 @@ def make_dist_train_step(
                 _mix(w_s, shifts, X, {k: aux[f"rep{k:+d}"] for k in shifts}), updates)
             Z = _sub(X_half, X)
             tdef, payload = codec.encode(Z, state.step, salt=2)
-            dZ = codec.decode(tdef, payload, Z)
-            X_new = _add(X, dZ)
+            # receive side: one fused unpack+dequant+axpy kernel per leaf
+            X_new = dec_axpy(tdef, payload, X, 1.0)
             for k in shifts:
-                aux[f"rep{k:+d}"] = jax.tree.map(
-                    lambda r, d: (r + d).astype(r.dtype),
-                    aux[f"rep{k:+d}"], codec.decode(tdef, _roll(payload, k), Z))
+                aux[f"rep{k:+d}"] = dec_axpy(
+                    tdef, _roll(payload, k), aux[f"rep{k:+d}"], 1.0)
 
         else:  # ecd
             s = (state.step + 1).astype(jnp.float32)
@@ -324,13 +476,14 @@ def make_dist_train_step(
             tdef, payload = codec.encode(Z, state.step, salt=3)
             decay = 1.0 - 2.0 / s
             blend = 2.0 / s
-            aux["tilde_self"] = jax.tree.map(
-                lambda t, c: (decay * t + blend * c).astype(t.dtype),
-                aux["tilde_self"], codec.decode(tdef, payload, Z))
+            # decay*tilde + blend*decode in ONE fused pass per leaf: the decay
+            # scale rides the kernel's acc_weight operand, so no pre-scaled
+            # f32 accumulator is ever written to HBM
+            aux["tilde_self"] = dec_axpy(tdef, payload, aux["tilde_self"],
+                                         blend, decay)
             for k in shifts:
-                aux[f"tilde{k:+d}"] = jax.tree.map(
-                    lambda t, c: (decay * t + blend * c).astype(t.dtype),
-                    aux[f"tilde{k:+d}"], codec.decode(tdef, _roll(payload, k), Z))
+                aux[f"tilde{k:+d}"] = dec_axpy(tdef, _roll(payload, k),
+                                               aux[f"tilde{k:+d}"], blend, decay)
 
         consensus = sum(
             jnp.sum((l - jnp.mean(l, axis=0, keepdims=True)) ** 2)

@@ -4,10 +4,10 @@ Handles: arbitrary input shapes (flatten/pad to the 2-D blocked view), PRNG-key 
 seed derivation, interpret-mode fallback on non-TPU backends, and payloads in the
 same wire format as :class:`repro.core.compression.RandomQuantizer`:
 
-* ``bits=8`` (and any non-packable width): ``codes`` int8 ``(n_blocks, block_size)``
-  + ``scale`` f32 ``(n_blocks, 1)``.
-* ``bits in {2, 4}``: ``codes`` **uint32** ``(n_blocks, block_size*bits/32)``
-  (bit-packed words, planar layout — see kernels/quant.py) + ``scale``.
+* ``bits=8``: ``codes`` int8 ``(n_blocks, block_size)`` + ``scale`` f32
+  ``(n_blocks, 1)``.
+* ``bits in 2..7``: ``codes`` **uint32** ``(n_blocks, block_size*bits/32)``
+  (bit-exact stream packing — see kernels/quant.py) + ``scale``.
 
 The payload's ``codes.dtype`` is therefore self-describing: uint32 means packed.
 ``payload_nbytes`` is the honest wire cost used by the netsim cost model and the
@@ -49,7 +49,7 @@ def quantize(key: jax.Array, x: jax.Array, *, bits: int = 8, block_size: int = 1
              pack: bool | None = None) -> dict:
     """Stochastic-quantize any-shaped ``x`` into a {codes, scale} payload.
 
-    For ``bits in {2, 4}`` (and ``pack`` not explicitly False) the codes come
+    For ``bits in 2..7`` (and ``pack`` not explicitly False) the codes come
     out of the fused quantize+pack kernel as uint32 words — the payload is the
     packed wire format, ``bits + 32/block`` bits per element on the wire.
     """
@@ -78,15 +78,17 @@ def dequantize(payload: dict, *, bits: int = 8, shape: tuple = (), dtype: Any = 
     return out.reshape(-1)[:n].reshape(shape).astype(dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "weight"))
+@functools.partial(jax.jit, static_argnames=("bits",))
 def dequant_axpy(payload: dict, acc: jax.Array, *, bits: int, weight: float) -> jax.Array:
     """Fused receive path: ``acc + weight * dequantize(payload)``, acc-shaped.
 
     For packed payloads this is one kernel — unpack, dequantize and accumulate
-    in VMEM, never writing the reconstructed fp32 tensor to HBM.
+    in VMEM, never writing the reconstructed fp32 tensor to HBM.  ``weight``
+    may be a float or a traced scalar.
     """
     packed = payload["codes"].dtype == jnp.uint32
-    block_size = payload["codes"].shape[-1] * (32 // bits if packed else 1)
+    block_size = payload["codes"].shape[-1] * 32 // bits if packed \
+        else payload["codes"].shape[-1]
     blocks = _to_blocks(acc, block_size)
     if packed:
         out = _q.unpack_dequant_axpy_2d(payload["codes"], payload["scale"], blocks,

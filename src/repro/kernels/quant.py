@@ -5,32 +5,48 @@ gossip round quantizes the full model-delta (up to tens of GB across the node). 
 kernel families share one VMEM pass over the tensor:
 
 * ``quantize_2d``      — scale = max|block| -> normalize -> stochastic round ->
-  **int8** codes (the ``bits=8`` container; also serves 3..7-bit levels, which
-  still ship one byte per element).
+  **int8** codes (the ``bits=8`` container).
 * ``quantize_pack_2d`` — same pipeline, then **bit-packs** the codes into
-  ``uint32`` words before they ever leave VMEM: 8x4-bit or 16x2-bit codes per
-  word, so the HBM write (and the wire payload built from it) is ``bits``/32 of
-  fp32 — the paper's compression ratio as actual bytes, not a formula.
+  ``uint32`` words before they ever leave VMEM — any width 2..7, so the HBM
+  write (and the wire payload built from it) is exactly ``bits``/32 of fp32 —
+  the paper's compression ratio (including its 3-bit sweet spot) as actual
+  bytes, not a formula.
 
 Receive side mirrors it: ``unpack_dequant_2d`` (unpack -> dequantize) and
 ``unpack_dequant_axpy_2d`` (unpack -> dequantize -> ``acc + w * value``), which
 fuses the neighbor-mix accumulation so the reconstructed fp32 neighbor tensor is
-never materialized in HBM before the gossip average.
+never materialized in HBM before the gossip average.  The axpy weight is a
+scalar *operand* (not a compile-time constant), so traced mixing weights —
+ECD's 2/s blend — drive the same kernel.
 
-Packed wire format (shared with kernels/ref.py and the WireCodec in
-distributed/decentralized.py -- all three produce identical words):
+Packed wire format v2 — bit-exact stream layout (shared with kernels/ref.py
+and the WireCodec in distributed/decentralized.py; all three produce identical
+words, and it is bit-identical to the v1 planar format for bits in {2, 4}):
 
-    cpw  = 32 // bits            # codes per uint32 word (8 @ 4-bit, 16 @ 2-bit)
-    W    = cols // cpw           # words per row of ``cols`` codes
-    u    = code + levels + 1     # bias signed [-L, L] -> unsigned [1, 2L+1]
-    word[w] = OR_k  u[w + k*W] << (k * bits)      for k in 0..cpw-1
+    cpg = lcm(bits, 32) // bits   # codes per group  (8 @4b, 16 @2/6b, 32 @3/5/7b)
+    wpg = lcm(bits, 32) // 32     # words per group  (1 @2/4b, 3 @3/6b, 5, 7)
+    G   = cols // cpg             # groups per row of ``cols`` codes
+    u   = code + levels + 1       # bias signed [-L, L] -> unsigned [1, 2^bits - 1]
 
-i.e. a *planar* layout: bit-plane ``k`` of every word is the contiguous lane
-slice ``u[k*W : (k+1)*W]``.  Planar (rather than interleaving adjacent codes)
-keeps every pack/unpack step a static contiguous lane slice — no strided lane
-gathers, which the TPU VPU cannot do cheaply.  ``cols`` must be a multiple of
-``cpw``; with the default ``block_size=1024`` at 4 bits, W = 128 = one full
-lane register per row.
+Group ``g`` packs the ``cpg`` codes ``{u[j*G + g] : j}`` as one contiguous
+``cpg * bits``-bit little-endian stream filling its ``wpg`` words exactly —
+code ``j`` occupies stream bits ``[j*bits, (j+1)*bits)``, **straddling a word
+boundary** whenever ``32 % bits != 0``:
+
+    w, off   = divmod(j * bits, 32)
+    word[w]     |= u_j << off                 # low piece (high bits drop, u32)
+    word[w + 1] |= u_j >> (32 - off)          # carry, iff off + bits > 32
+
+so a row of ``cols`` codes ships ``cols * bits / 32 = ceil`` words — 3-bit
+is 3.0 wire bits/element + scale, not an 8-bit container.  Rows are laid out
+word-plane-major (``packed[:, w*G:(w+1)*G]`` is word ``w`` of every group):
+both the group slices ``u[j*G:(j+1)*G]`` and the word planes are static
+contiguous lane slices, so pack/unpack never needs a strided lane gather
+(which the TPU VPU cannot do cheaply).  ``cols`` must be a multiple of
+``cpg``; ``cols % 128 == 0`` (the lane-width contract below) guarantees it.
+Tail handling lives one level up: callers pad the last dim to a whole block
+(``aligned_block`` rounds the block to whole groups) and slice ``[:n]`` after
+dequantize, so ragged tails never reach the kernels.
 
 TPU adaptation notes (vs. a CUDA quantizer):
 * Blocks are *rows* of a (rows, block_size) view with block_size a multiple of 128
@@ -49,12 +65,21 @@ tests/test_kernels.py.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-PACKABLE_BITS = (2, 4)
+PACKABLE_BITS = (2, 3, 4, 5, 6, 7)
+
+
+def stream_geometry(bits: int) -> tuple:
+    """(codes per group, words per group) of the v2 stream layout — the single
+    source of truth for the group geometry (kernels/ref.py re-exports it); see
+    the module docstring."""
+    l = math.lcm(bits, 32)
+    return l // bits, l // 32
 
 
 def pcg_hash(x: jax.Array) -> jax.Array:
@@ -103,43 +128,65 @@ def _quant_pack_kernel(seed_ref, x_ref, packed_ref, scale_ref, *,
     x = x_ref[...].astype(jnp.float32)
     q, scale = _stochastic_codes(x, seed_ref, pl.program_id(0),
                                  levels=levels, block_rows=block_rows, cols=cols)
-    u = (q + jnp.float32(levels + 1)).astype(jnp.uint32)   # biased, in [1, 2L+1]
-    cpw = 32 // bits
-    w = cols // cpw
-    word = u[:, 0:w]
-    for k in range(1, cpw):
-        word = word | (u[:, k * w:(k + 1) * w] << jnp.uint32(k * bits))
-    packed_ref[...] = word
+    u = (q + jnp.float32(levels + 1)).astype(jnp.uint32)   # biased, in [1, 2^bits-1]
+    cpg, wpg = stream_geometry(bits)
+    g = cols // cpg
+    words = [jnp.zeros(u.shape[:-1] + (g,), jnp.uint32) for _ in range(wpg)]
+    for j in range(cpg):
+        w, off = divmod(j * bits, 32)
+        uj = u[:, j * g:(j + 1) * g]
+        words[w] = words[w] | (uj << jnp.uint32(off))
+        if off + bits > 32:
+            words[w + 1] = words[w + 1] | (uj >> jnp.uint32(32 - off))
+    for w in range(wpg):
+        packed_ref[:, w * g:(w + 1) * g] = words[w]
     scale_ref[...] = scale
 
 
 def _dequant_kernel(codes_ref, scale_ref, out_ref, *, levels: int):
     q = codes_ref[...].astype(jnp.float32)
+    # multiply by the precomputed reciprocal: XLA rewrites div-by-constant to a
+    # reciprocal multiply anyway, so this IS the canonical dequant semantics —
+    # kernels/ref.py and both codecs use the identical formulation (bit-exact)
     out_ref[...] = q * (scale_ref[...] * jnp.float32(1.0 / levels))
+
+
+def _unpacked_planes(word, *, bits: int, levels: int):
+    """Yield (code plane index j, signed int32 codes) for a packed word array."""
+    cpg, wpg = stream_geometry(bits)
+    g = word.shape[-1] // wpg
+    mask = jnp.uint32((1 << bits) - 1)
+    planes = [word[:, w * g:(w + 1) * g] for w in range(wpg)]
+    for j in range(cpg):
+        w, off = divmod(j * bits, 32)
+        v = planes[w] >> jnp.uint32(off)
+        if off + bits > 32:
+            v = v | (planes[w + 1] << jnp.uint32(32 - off))
+        yield j, (v & mask).astype(jnp.int32) - (levels + 1)
 
 
 def _unpack_dequant_kernel(packed_ref, scale_ref, out_ref, *, bits: int, levels: int):
     word = packed_ref[...]
     inv = scale_ref[...] * jnp.float32(1.0 / levels)
-    cpw = 32 // bits
-    w = word.shape[-1]
-    mask = jnp.uint32((1 << bits) - 1)
-    for k in range(cpw):
-        u = ((word >> jnp.uint32(k * bits)) & mask).astype(jnp.int32) - (levels + 1)
-        out_ref[:, k * w:(k + 1) * w] = u.astype(jnp.float32) * inv
+    cpg, wpg = stream_geometry(bits)
+    g = word.shape[-1] // wpg
+    for j, u in _unpacked_planes(word, bits=bits, levels=levels):
+        out_ref[:, j * g:(j + 1) * g] = u.astype(jnp.float32) * inv
 
 
-def _unpack_dequant_axpy_kernel(packed_ref, scale_ref, acc_ref, out_ref, *,
-                                bits: int, levels: int, weight: float):
+def _unpack_dequant_axpy_kernel(weights_ref, packed_ref, scale_ref, acc_ref, out_ref, *,
+                                bits: int, levels: int):
+    # weights_ref = [acc_weight, weight]: out = acc_weight*acc + weight*dequant.
+    # Scaling the accumulator here (rather than pre-scaling it in HBM) keeps
+    # ECD's (1-2/s)*tilde + (2/s)*decode update a genuine single VMEM pass.
     word = packed_ref[...]
-    inv = scale_ref[...] * jnp.float32(weight / levels)
-    cpw = 32 // bits
-    w = word.shape[-1]
-    mask = jnp.uint32((1 << bits) - 1)
-    for k in range(cpw):
-        u = ((word >> jnp.uint32(k * bits)) & mask).astype(jnp.int32) - (levels + 1)
-        out_ref[:, k * w:(k + 1) * w] = (
-            acc_ref[:, k * w:(k + 1) * w] + u.astype(jnp.float32) * inv)
+    aw = weights_ref[0]
+    inv = scale_ref[...] * (weights_ref[1] * jnp.float32(1.0 / levels))
+    cpg, wpg = stream_geometry(bits)
+    g = word.shape[-1] // wpg
+    for j, u in _unpacked_planes(word, bits=bits, levels=levels):
+        out_ref[:, j * g:(j + 1) * g] = (
+            aw * acc_ref[:, j * g:(j + 1) * g] + u.astype(jnp.float32) * inv)
 
 
 def _pick_block_rows(rows: int, cols: int, vmem_budget: int = 4 << 20) -> int:
@@ -271,12 +318,17 @@ def unpack_dequant_2d(packed: jax.Array, scale: jax.Array, *, bits: int,
 
 
 def unpack_dequant_axpy_2d(packed: jax.Array, scale: jax.Array, acc: jax.Array, *,
-                           bits: int, weight: float, interpret: bool = False) -> jax.Array:
-    """Fused unpack + dequantize + accumulate: ``acc + weight * dequant(packed)``.
+                           bits: int, weight, acc_weight=1.0,
+                           interpret: bool = False) -> jax.Array:
+    """Fused unpack + dequantize + accumulate:
+    ``acc_weight * acc + weight * dequant(packed)``.
 
     The receive side of a gossip round: the reconstructed fp32 neighbor never
     exists in HBM — each unpacked bit-plane is scaled and added into the mix
-    accumulator while still in VMEM.
+    accumulator while still in VMEM.  Both weights may be python floats or
+    traced scalars (they ride a (2,) operand, like the seed on the send side);
+    ``acc_weight`` serves ECD's ``(1-2/s)*tilde + (2/s)*decode`` update
+    without pre-scaling the accumulator through HBM.
     """
     rows, w = packed.shape
     assert bits in PACKABLE_BITS
@@ -286,11 +338,13 @@ def unpack_dequant_axpy_2d(packed: jax.Array, scale: jax.Array, acc: jax.Array, 
     bm = _pick_block_rows(rows, cols)
     (packed, scale, acc), pad = _pad_rows([packed, scale, acc], bm, rows)
     grid = ((rows + pad) // bm,)
+    weights = jnp.stack([jnp.asarray(acc_weight, jnp.float32).reshape(()),
+                         jnp.asarray(weight, jnp.float32).reshape(())])
     out = pl.pallas_call(
-        functools.partial(_unpack_dequant_axpy_kernel, bits=bits, levels=levels,
-                          weight=float(weight)),
+        functools.partial(_unpack_dequant_axpy_kernel, bits=bits, levels=levels),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),  # [acc_weight, weight], broadcast
             pl.BlockSpec((bm, w), lambda i: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i: (i, 0)),
             pl.BlockSpec((bm, cols), lambda i: (i, 0)),
@@ -298,5 +352,5 @@ def unpack_dequant_axpy_2d(packed: jax.Array, scale: jax.Array, acc: jax.Array, 
         out_specs=pl.BlockSpec((bm, cols), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
         interpret=interpret,
-    )(packed, scale.astype(jnp.float32), acc.astype(jnp.float32))
+    )(weights, packed, scale.astype(jnp.float32), acc.astype(jnp.float32))
     return out[:rows] if pad else out

@@ -2,59 +2,99 @@
 
 ``quantize_2d_ref`` replicates quant.py exactly — including the counter-based PCG
 stochastic rounding — so kernel tests can assert exact equality of codes, not just
-statistical agreement.  ``pack_codes`` / ``unpack_codes`` implement the planar
-uint32 word layout documented in kernels/quant.py; they are the *shared*
-reference codec: the distributed WireCodec and the compression operators call
-these, and the Pallas kernels are tested word-for-word against them.
+statistical agreement.  ``pack_codes`` / ``unpack_codes`` implement the bit-exact
+stream layout documented in kernels/quant.py (wire format v2: any width 2..7,
+codes straddle uint32 word boundaries); they are the *shared* reference codec:
+the distributed WireCodec and the compression operators call these, and the
+Pallas kernels are tested word-for-word against them.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.quant import PACKABLE_BITS, pcg_hash, uniform_from_hash  # noqa: F401
+from repro.kernels.quant import (  # noqa: F401  (shared single source of truth)
+    PACKABLE_BITS,
+    pcg_hash,
+    stream_geometry,
+    uniform_from_hash,
+)
+
+
+def packed_auto(bits: int, block: int) -> bool:
+    """The shared auto-pack policy (``pack=None``): pack whenever the width is
+    packable and the block is a whole number of stream groups; otherwise fall
+    back to the int8 container (honestly reported by the measured wire bits).
+    Single source of truth for WireCodec and RandomQuantizer."""
+    if bits not in PACKABLE_BITS:
+        return False
+    cpg, _ = stream_geometry(bits)
+    return block % cpg == 0
+
+
+def assert_packable(bits: int, block: int) -> None:
+    """Validate an *explicit* ``pack=True`` request against the geometry."""
+    assert bits in PACKABLE_BITS, \
+        f"packable bits are {PACKABLE_BITS}, got {bits}"
+    cpg, _ = stream_geometry(bits)
+    assert block % cpg == 0, \
+        f"packed {bits}-bit needs block % {cpg} == 0"
 
 
 def aligned_block(limit: int, n: int, *, bits: int) -> int:
     """Block size for an ``n``-element (last-dim) leaf: shrink toward ``n`` to
-    limit padding, rounded up to a whole number of packed words so the block
-    always packs cleanly.  Shared by RandomQuantizer and WireCodec so the two
-    codecs agree on block geometry."""
-    cpw = 32 // bits
+    limit padding, rounded up to a whole number of packed *groups* so the block
+    always packs cleanly into whole uint32 words.  Shared by RandomQuantizer
+    and WireCodec so the two codecs agree on block geometry."""
+    cpg, _ = stream_geometry(bits)
     block = min(limit, max(n, 1))
-    return min(limit, -(-block // cpw) * cpw)
+    return min(limit, -(-block // cpg) * cpg)
 
 
 def pack_codes(codes: jax.Array, *, bits: int) -> jax.Array:
     """Bit-pack int8 codes in [-levels, levels] along the last dim.
 
-    (..., cols) int8 -> (..., cols*bits/32) uint32, planar layout: word ``w``
-    holds the biased codes at positions ``{w + k*W}`` in bit-field ``k*bits``.
-    ``cols`` must be a multiple of 32/bits.
+    (..., cols) int8 -> (..., cols*bits/32) uint32, the stream layout of
+    kernels/quant.py: codes are biased to [1, 2^bits - 1], grouped into
+    ``cpg = lcm(bits,32)/bits``-code groups laid out plane-major across the
+    ``G = cols/cpg`` groups, and each group's ``cpg * bits``-bit stream fills
+    ``wpg = lcm(bits,32)/32`` words exactly (codes straddle word boundaries
+    when 32 % bits != 0).  ``cols`` must be a multiple of ``cpg``.
     """
     assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
-    cpw = 32 // bits
+    cpg, wpg = stream_geometry(bits)
     levels = 2 ** (bits - 1) - 1
     cols = codes.shape[-1]
-    assert cols % cpw == 0, f"last dim {cols} not a multiple of {cpw}"
-    w = cols // cpw
+    assert cols % cpg == 0, f"last dim {cols} not a multiple of {cpg}"
+    g = cols // cpg
     u = (codes.astype(jnp.int32) + (levels + 1)).astype(jnp.uint32)
-    word = u[..., 0:w]
-    for k in range(1, cpw):
-        word = word | (u[..., k * w:(k + 1) * w] << jnp.uint32(k * bits))
-    return word
+    words = [jnp.zeros(codes.shape[:-1] + (g,), jnp.uint32) for _ in range(wpg)]
+    for j in range(cpg):
+        w, off = divmod(j * bits, 32)
+        uj = u[..., j * g:(j + 1) * g]
+        words[w] = words[w] | (uj << jnp.uint32(off))      # uint32: high bits drop
+        if off + bits > 32:                                # straddles into word w+1
+            words[w + 1] = words[w + 1] | (uj >> jnp.uint32(32 - off))
+    return jnp.concatenate(words, axis=-1)
 
 
 def unpack_codes(packed: jax.Array, *, bits: int) -> jax.Array:
     """Inverse of :func:`pack_codes`: (..., W) uint32 -> (..., W*32/bits) int8."""
     assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
-    cpw = 32 // bits
+    cpg, wpg = stream_geometry(bits)
     levels = 2 ** (bits - 1) - 1
     mask = jnp.uint32((1 << bits) - 1)
-    parts = [
-        ((packed >> jnp.uint32(k * bits)) & mask).astype(jnp.int32) - (levels + 1)
-        for k in range(cpw)
-    ]
+    W = packed.shape[-1]
+    assert W % wpg == 0, f"word count {W} not a multiple of {wpg}"
+    g = W // wpg
+    planes = [packed[..., w * g:(w + 1) * g] for w in range(wpg)]
+    parts = []
+    for j in range(cpg):
+        w, off = divmod(j * bits, 32)
+        v = planes[w] >> jnp.uint32(off)
+        if off + bits > 32:
+            v = v | (planes[w + 1] << jnp.uint32(32 - off))
+        parts.append(((v & mask).astype(jnp.int32) - (levels + 1)))
     return jnp.concatenate(parts, axis=-1).astype(jnp.int8)
 
 
@@ -78,7 +118,10 @@ def quantize_2d_ref(x: jax.Array, seed: jax.Array, *, bits: int):
 
 def dequantize_2d_ref(codes: jax.Array, scale: jax.Array, *, bits: int) -> jax.Array:
     levels = 2 ** (bits - 1) - 1
-    return codes.astype(jnp.float32) * (scale.astype(jnp.float32) / levels)
+    # reciprocal multiply, never a divide: XLA rewrites div-by-constant into a
+    # reciprocal multiply under jit, so the multiply IS the canonical semantics
+    # (kernels and codecs share this formulation; tested bit-exact)
+    return codes.astype(jnp.float32) * (scale.astype(jnp.float32) * jnp.float32(1.0 / levels))
 
 
 def quantize_pack_2d_ref(x: jax.Array, seed: jax.Array, *, bits: int):
@@ -92,5 +135,7 @@ def unpack_dequant_2d_ref(packed: jax.Array, scale: jax.Array, *, bits: int) -> 
 
 
 def unpack_dequant_axpy_2d_ref(packed: jax.Array, scale: jax.Array, acc: jax.Array, *,
-                               bits: int, weight: float) -> jax.Array:
-    return acc.astype(jnp.float32) + weight * unpack_dequant_2d_ref(packed, scale, bits=bits)
+                               bits: int, weight: float,
+                               acc_weight: float = 1.0) -> jax.Array:
+    return acc_weight * acc.astype(jnp.float32) \
+        + weight * unpack_dequant_2d_ref(packed, scale, bits=bits)

@@ -92,8 +92,11 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
     opt = sgd(momentum=momentum)
     codec = WireCodec(bits=bits) if algo in ("naive", "dcd", "ecd") else None
     loss_fn = lambda p, b: model.loss(p, b, remat=plan.remat)
+    # mesh is multi-axis (node, fsdp, model): the step falls back from the
+    # shard_map-fused decode to the sharding-preserving reference codec (see
+    # _make_decode_axpy) — the wire payload is identical either way
     step = make_dist_train_step(loss_fn, algo, opt, codec, n, constant(1e-2),
-                                topology=topology)
+                                topology=topology, mesh=mesh)
 
     import jax.numpy as _jnp
     aux_dtype = _jnp.bfloat16 if plan.aux_dtype == "bfloat16" else None
@@ -134,6 +137,10 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
         wire = {
             "wire_payload_bytes": payload_bytes,
             "wire_bits_per_element": round(8.0 * payload_bytes / stacked_elems, 4),
+            # measured from real payload container nbytes (vs. a *modeled*
+            # figure like RandomSparsifier's value+index codec — see netsim)
+            "wire_measured": not getattr(codec, "wire_is_modeled", False),
+            "wire_format": "packed-stream-u32" if codec.packed else "int8",
         }
     rec = {
         "arch": arch, "shape": shape_name, "kind": "train", "algo": algo, "bits": bits,

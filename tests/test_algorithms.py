@@ -62,6 +62,7 @@ def test_cpsgd_keeps_nodes_identical(problem):
     assert float(consensus_distance(s.params)) < 1e-12
 
 
+@pytest.mark.slow
 def test_ecd_estimate_error_diminishes(problem):
     """ECD invariant: E||x_tilde - x||² = O(1/t) (Lemma 12)."""
     comp = RandomQuantizer(bits=8, block_size=32)
@@ -80,6 +81,7 @@ def test_ecd_estimate_error_diminishes(problem):
 
 # ------------------------------------------------------- convergence claims
 
+@pytest.mark.slow
 def test_dpsgd_converges_to_global_optimum(problem):
     h = _run(problem, "dpsgd")
     assert h["final_loss"] < 1.2 * h["opt_loss"] + 1e-3
@@ -93,11 +95,13 @@ def test_dcd_8bit_matches_full_precision(problem):
     assert h["final_dist_opt"] < 1e-2
 
 
+@pytest.mark.slow
 def test_ecd_8bit_matches_full_precision(problem):
     h = _run(problem, "ecd", RandomQuantizer(bits=8, block_size=32))
     assert h["final_loss"] < 1.5 * h["opt_loss"] + 5e-3
 
 
+@pytest.mark.slow
 def test_naive_compression_fails(problem):
     """Paper Fig. 1 / Supp. D: naive compression does not reach the optimum."""
     h_naive = _run(problem, "naive", RandomQuantizer(bits=4, block_size=32))
@@ -107,6 +111,7 @@ def test_naive_compression_fails(problem):
     assert h_naive["final_loss"] > 5 * h_dcd["final_loss"]
 
 
+@pytest.mark.slow
 def test_linear_speedup_direction():
     """More nodes with the same per-node batch => no worse final error (O(1/sqrt(nT)))."""
     p_small = make_problem(jax.random.key(5), n=2, m=256, d=32, hetero=0.2, noise=1.0, batch=2)
@@ -116,6 +121,7 @@ def test_linear_speedup_direction():
     assert h16["final_dist_opt"] <= h2["final_dist_opt"] * 1.5
 
 
+@pytest.mark.slow
 def test_consensus_shrinks_over_training(problem):
     h = _run(problem, "dcd", RandomQuantizer(bits=8, block_size=32))
     assert h["consensus"][-1] < 1e-2

@@ -28,7 +28,7 @@ def test_unbiasedness(comp):
     """Assumption 1.5: E[C(z)] = z.  Monte-Carlo with tight tolerance."""
     key = jax.random.key(0)
     z = jax.random.normal(jax.random.key(1), (257,))
-    n = 4000
+    n = 1500    # the 6-sigma bound below is MC-adaptive in n
     acc = jnp.zeros_like(z)
     acc2 = jnp.zeros_like(z)
     apply = jax.jit(lambda k: comp(k, z))
@@ -52,7 +52,7 @@ def test_zero_maps_to_zero(comp):
 @pytest.mark.parametrize("bits", [2, 4, 8])
 def test_quantizer_roundtrip_shapes_dtypes(bits):
     comp = RandomQuantizer(bits=bits, block_size=128)
-    for shape in [(7,), (128,), (129,), (4, 33), (2, 3, 5)]:
+    for shape in [(7,), (129,), (4, 33)]:   # ragged, block+1, multi-dim
         for dtype in [jnp.float32, jnp.bfloat16]:
             z = jax.random.normal(jax.random.key(3), shape, dtype=dtype)
             out = comp(jax.random.key(4), z)
@@ -130,7 +130,7 @@ def test_sparsifier_variance_matches_theory():
     assert abs(np.mean(errs) - expect) / expect < 0.15
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=8, deadline=None)
 @given(
     bits=st.integers(2, 8),
     n=st.integers(1, 600),
@@ -161,3 +161,55 @@ def test_registry():
     assert make_compressor("quant", bits=4).bits == 4
     assert make_compressor("identity").name == "identity"
     assert make_compressor("sparsify", p=0.5).p == 0.5
+
+
+def test_registry_wire_honesty():
+    """Every name in make_compressor's registry either measures its wire bits
+    from the real payload containers (eval_shape nbytes) or is *explicitly*
+    flagged modeled.  The sparsifier is the one modeled exception — its
+    in-memory payload is dense fp32 until a real sparse wire codec lands
+    (ROADMAP open item) — and dryrun/roofline/netsim tag it as such."""
+    from repro.core.compression import REGISTRY
+    from repro.kernels.ops import payload_nbytes
+
+    n = 4096
+    for name in REGISTRY:
+        kwargs = {"bits": 5, "block_size": 1024} if name == "quant" else {}
+        comp = make_compressor(name, **kwargs)
+        payload = jax.eval_shape(comp.compress, jax.random.key(0),
+                                 jax.ShapeDtypeStruct((n,), jnp.float32))
+        measured = 8.0 * payload_nbytes(payload) / n
+        if comp.wire_is_modeled:
+            assert name == "sparsify", f"unexpected modeled compressor {name}"
+            assert measured == 32.0               # dense fp32 in memory...
+            assert comp.wire_bits_per_element() == pytest.approx(0.25 * 64.0)
+        else:
+            assert comp.wire_bits_per_element((n,)) == pytest.approx(measured), name
+
+
+def test_odd_width_small_block_falls_back_to_int8():
+    """Auto pack mode: a block smaller than one stream group (3-bit needs 32
+    codes/group) falls back to the int8 container instead of refusing the
+    config; only an *explicit* pack=True asserts."""
+    comp = RandomQuantizer(bits=3, block_size=16)
+    assert not comp.packed
+    p = comp.compress(jax.random.key(0), jnp.ones((64,)))
+    assert p["codes"].dtype == jnp.int8
+    assert comp.wire_bits_per_element((64,)) > 8.0       # honest container bits
+    with pytest.raises(AssertionError):
+        RandomQuantizer(bits=3, block_size=16, pack=True)
+
+
+@pytest.mark.parametrize("bits", [3, 5, 6, 7])
+def test_odd_width_quantizer_ships_sub_byte(bits):
+    """Wire format v2: odd widths are real sub-byte payloads now, measured."""
+    comp = RandomQuantizer(bits=bits, block_size=1024)
+    assert comp.packed
+    wb = comp.wire_bits_per_element((1 << 16,))
+    assert wb == pytest.approx(bits + 32.0 / 1024)
+    # distribution unchanged by packing (lossless on codes)
+    unpacked = RandomQuantizer(bits=bits, block_size=1024, pack=False)
+    z = jax.random.normal(jax.random.key(2), (3000,))
+    np.testing.assert_array_equal(
+        np.asarray(comp(jax.random.key(3), z)),
+        np.asarray(unpacked(jax.random.key(3), z)))

@@ -95,6 +95,7 @@ def test_ssm_decode_constant_memory_long_run():
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
+@pytest.mark.slow
 @settings(max_examples=4, deadline=None)
 @given(topo=st.sampled_from(["ring", "chain", "torus", "full"]),
        algo=st.sampled_from(["dcd", "ecd"]))

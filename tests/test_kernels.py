@@ -52,7 +52,7 @@ def test_ops_roundtrip_any_shape(dtype, shape):
 def test_ops_unbiased_statistically():
     x = jax.random.normal(jax.random.key(3), (512,))
     acc = jnp.zeros_like(x)
-    n = 800
+    n = 250          # tolerance below scales with 1/sqrt(n); margin is ~3x
     for k in jax.random.split(jax.random.key(4), n):
         p = kops.quantize(k, x, bits=4, block_size=128)
         acc = acc + kops.dequantize(p, bits=4, shape=x.shape)
@@ -73,10 +73,10 @@ def test_kernel_payload_compatible_with_compressor():
     assert float(jnp.max(jnp.abs(out - x))) < 0.2  # within a few bins
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=6, deadline=None)
 @given(
-    rows=st.integers(1, 300),
-    cols=st.sampled_from([128, 256, 512]),
+    rows=st.sampled_from([1, 9, 120, 300]),   # fixed set: padded-shape reuse
+    cols=st.sampled_from([128, 256]),
     bits=st.integers(2, 8),
     seed=st.integers(0, 2**31 - 1),
 )
@@ -175,11 +175,11 @@ def test_packed_payload_measured_wire_bits():
     assert (n * 4) / kops.payload_nbytes(p) >= 7.8   # >= 7.8x vs fp32
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=6, deadline=None)
 @given(
-    rows=st.integers(1, 120),
-    cols=st.sampled_from([128, 256, 512]),
-    bits=st.sampled_from([2, 4]),
+    rows=st.sampled_from([1, 9, 120]),        # fixed set: padded-shape reuse
+    cols=st.sampled_from([128, 256]),
+    bits=st.sampled_from([2, 3, 4, 5, 6, 7]),
     seed=st.integers(0, 2**31 - 1),
 )
 def test_packed_kernel_property_sweep(rows, cols, bits, seed):

@@ -11,8 +11,20 @@ from repro.models.api import build_model, make_batch
 from repro.models.moe import moe_forward, moe_init
 from repro.models.ssm import ssd_chunked, ssd_recurrent_ref
 
+# Heavy archs whose families keep cheaper fast-tier coverage (SSM via mamba2,
+# MoE via test_moe_routing_properties, enc-dec via
+# test_whisper_cross_attention_sees_encoder, VLM via
+# test_vlm_frontend_changes_text_logits): their smoke compiles dominate the
+# fast gate, so they ride the full-suite CI job instead.
+_HEAVY_ARCHS = {"zamba2-7b", "internvl2-76b", "deepseek-v2-lite-16b",
+                "deepseek-moe-16b", "whisper-base",
+                # redundant dense variants: granite-3-2b covers the family fast
+                "mistral-large-123b", "starcoder2-15b", "codeqwen1.5-7b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS else a
+               for a in ARCH_IDS]
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_arch_smoke_forward_and_train_step(arch):
     """Reduced variant: one forward + one SGD train step on CPU; shapes + no NaNs."""
     cfg = get_config(arch).reduced()
@@ -33,7 +45,7 @@ def test_arch_smoke_forward_and_train_step(arch):
     assert float(loss2) < float(loss) + 1.0  # SGD step did not explode
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_arch_smoke_decode_step(arch):
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
@@ -203,6 +215,7 @@ def test_whisper_cross_attention_sees_encoder():
     assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-4
 
 
+@pytest.mark.slow
 def test_zamba2_shared_attention_is_truly_shared():
     """Zamba2: one shared attention block — grads accumulate across all applications."""
     cfg = get_config("zamba2-7b").reduced()

@@ -62,8 +62,8 @@ def test_comm_time_monotone_in_latency():
 
 def test_strategies_for_uses_measured_payload_bits():
     """strategies_for derives lp bytes from the compressor's real containers:
-    packed 4-bit halves the 8-bit payload; '3-bit' honestly costs its int8
-    container, not 3 bits."""
+    packed 4-bit halves the 8-bit payload, and the stream layout makes 3-bit
+    a real ~3.03-bit payload (wire format v2), not an int8 container."""
     from repro.core.compression import RandomQuantizer
     from repro.netsim import strategies_for
 
@@ -73,4 +73,17 @@ def test_strategies_for_uses_measured_payload_bits():
     lp3 = strategies_for(M, 8, RandomQuantizer(bits=3, block_size=1024))["decentralized_lp"]
     assert lp4.bytes_per_iter == pytest.approx(2 * M * 4.03125 / 32)
     assert lp4.bytes_per_iter == pytest.approx(0.5 * lp8.bytes_per_iter, rel=1e-2)
-    assert lp3.bytes_per_iter == pytest.approx(lp8.bytes_per_iter)  # int8 container
+    assert lp3.bytes_per_iter == pytest.approx(2 * M * 3.03125 / 32)
+    assert not lp3.wire_modeled
+
+
+def test_strategies_for_marks_modeled_sparsifier():
+    """RandomSparsifier's wire figure is an idealized (value+index) model —
+    its strategies must say so, so dryrun/roofline never report it as
+    measured traffic."""
+    from repro.core.compression import RandomSparsifier
+    from repro.netsim import strategies_for
+
+    lp = strategies_for(RESNET20_BYTES, 8, RandomSparsifier(p=0.25))["decentralized_lp"]
+    assert lp.wire_modeled
+    assert lp.bytes_per_iter == pytest.approx(2 * RESNET20_BYTES * (0.25 * 64.0) / 32)
