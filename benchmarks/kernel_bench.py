@@ -1,10 +1,11 @@
-"""Microbenchmarks: quantization kernels (CPU interpret timing + measured wire ratio).
+"""Microbenchmarks: compression kernels (CPU interpret timing + measured wire ratio).
 
 Wire ratios are computed from the payload's actual container nbytes
 (bit-stream-packed uint32 words at 2..7 bits, int8 at 8 bits, plus per-block
-fp32 scales) — the same bytes the decentralized ring step puts on the
-collective-permute.  The 3-bit row is the paper's low-bit sweet spot:
-~10.5x vs fp32 from real bytes.
+fp32 scales; fp32/fp16 values + bit-packed index words for the sparse codec)
+— the same bytes the decentralized ring step puts on the collective-permute.
+The 3-bit row is the paper's low-bit sweet spot: ~10.5x vs fp32 from real
+bytes; the sparse rows sit next to the 4-bit ~7.94x for comparison.
 """
 from __future__ import annotations
 
@@ -50,6 +51,31 @@ def main(rows: List[str]) -> None:
         us = _time(axpy, payload4, x)
         rows.append(f"kernel.dequant4_axpy_fused.n{n},{us:.1f},0")
 
+        # sparse codec: fused select+gather+pack and unpack+scatter(+axpy),
+        # measured pack/unpack wire ratio from real container nbytes (the
+        # value+index payload next to the quantizer's 4-bit ~7.94x row)
+        for p_keep, vdt, tag in ((0.25, jnp.float32, "sparse_rk25"),
+                                 (0.25, jnp.float16, "sparse_rk25f16"),
+                                 (0.1, jnp.float32, "sparse_rk10")):
+            sq = jax.jit(lambda k, v, pk=p_keep, vd=vdt: kops.sparse_compress(
+                k, v, p=pk, block_size=128, value_dtype=vd))
+            us = _time(sq, key, x, iters=5)
+            payload = sq(key, x)
+            wire = kops.payload_nbytes(payload)
+            rows.append(f"kernel.{tag}.n{n},{us:.1f},{x.nbytes / wire:.2f}")
+
+            sd = jax.jit(lambda pl: kops.sparse_decompress(pl, block_size=128,
+                                                           shape=(n,)))
+            us = _time(sd, payload, iters=5)
+            rows.append(f"kernel.de{tag}.n{n},{us:.1f},0")
+
+        payload_s = jax.jit(lambda k, v: kops.sparse_compress(
+            k, v, p=0.25, block_size=128))(key, x)
+        saxpy = jax.jit(lambda pl, a: kops.sparse_axpy(pl, a, block_size=128,
+                                                       weight=1.0 / 3.0))
+        us = _time(saxpy, payload_s, x, iters=5)
+        rows.append(f"kernel.sparse_scatter_axpy_fused.n{n},{us:.1f},0")
+
     # wire bits/element measured from payload containers (block_size=1024) —
     # the stream layout makes every width 2..7 a real sub-byte payload
     for bits in (8, 7, 6, 5, 4, 3, 2):
@@ -58,4 +84,13 @@ def main(rows: List[str]) -> None:
             jax.random.key(0), jax.ShapeDtypeStruct((1 << 20,), jnp.float32))
         rows.append(
             f"kernel.wire_bits_per_elem_{bits}bit,0,"
+            f"{8.0 * kops.payload_nbytes(p) / (1 << 20):.4f}")
+
+    # sparse wire bits/element, same honesty contract (block_size=128)
+    for p_keep in (0.5, 0.25, 0.1):
+        p = jax.eval_shape(
+            lambda k, v, pk=p_keep: kops.sparse_compress(k, v, p=pk, block_size=128),
+            jax.random.key(0), jax.ShapeDtypeStruct((1 << 20,), jnp.float32))
+        rows.append(
+            f"kernel.wire_bits_per_elem_sparse{int(p_keep * 100)},0,"
             f"{8.0 * kops.payload_nbytes(p) / (1 << 20):.4f}")

@@ -53,13 +53,11 @@ def main(rows: List[str], path: str = "results/dryrun.jsonl") -> None:
         rows.append(f"roofline.{tag}.dominant_{r['bottleneck']}_s,0,{dominant:.3e}")
         if "wire_bits_per_element" in r:
             # measured from the encoded payload's container nbytes at dry-run
-            # time — matches the s8/u32 collective-permute operands in the HLO.
-            # Records carrying wire_measured=False (a *modeled* codec, e.g. a
-            # sparsifier whose in-memory payload is dense fp32) are tagged so
-            # a modeled figure is never mistaken for measured wire traffic.
-            measured = r.get("wire_measured", True)
-            suffix = "" if measured else ".modeled"
-            rows.append(f"roofline.{tag}.wire_bits_per_elem{suffix},0,"
+            # time — matches the s8/u32 (or sparse f32+u32) collective-permute
+            # operands in the HLO.  Every codec measures now, the sparse
+            # value+index format included, so the old ".modeled" row suffix is
+            # gone for good.
+            rows.append(f"roofline.{tag}.wire_bits_per_elem,0,"
                         f"{r['wire_bits_per_element']:.4f}")
 
 

@@ -4,6 +4,7 @@ from repro.core.compression import (
     IdentityCompressor,
     RandomQuantizer,
     RandomSparsifier,
+    TopKSparsifier,
     make_compressor,
     measured_alpha,
 )

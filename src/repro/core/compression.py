@@ -11,23 +11,30 @@ Implemented operators:
 * :class:`IdentityCompressor`  — alpha = 0 (recovers exact D-PSGD).
 * :class:`RandomQuantizer`     — stochastic rounding to ``bits``-bit signed levels
   with a per-block max-abs scale (the paper's "random quantization", footnote 1).
-* :class:`RandomSparsifier`    — keep each coordinate w.p. ``p``, rescale by ``1/p``
-  (the paper's "random sparsification", footnote 2).
+* :class:`RandomSparsifier`    — fixed-capacity random-k: a seeded uniform
+  ``k = ceil(p * block)``-subset of every block, rescaled by ``block/k`` (the
+  unbiased form of the paper's "random sparsification", footnote 2).
+* :class:`TopKSparsifier`      — fixed-capacity top-k by magnitude (biased, but
+  with the bounded compression error the DCD/ECD theory hooks need; cf.
+  Koloskova et al. / DeepSqueeze, which treat sparsification as a first-class
+  compressor for decentralized training).
 
 Each operator exposes the *wire format* explicitly (``compress`` -> payload pytree,
 ``decompress`` -> reconstructed array) so the distributed runtime can put the small
 payload — not the fp32 tensor — on the network, and ``wire_bits_per_element`` so the
 network cost model and the roofline analysis can account for it.
 
-For the quantizer the wire format is *real*, not modeled: every width 2..7 is
-bit-packed into uint32 words via the bit-exact stream layout of
+Every wire format here is *real*, not modeled.  The quantizer bit-packs every
+width 2..7 into uint32 words via the bit-exact stream layout of
 kernels/quant.py (codes straddle word boundaries, so 3-bit really ships ~3
 wire bits/element — the paper's low-bit sweet spot), while 8-bit ships its
-int8 container.  ``wire_bits_per_element`` is derived from the payload's
-container sizes via ``jax.eval_shape`` on ``compress`` (model == measured by
-construction; asserted in tests/test_compression.py).  The sparsifier's figure
-is the one *modeled* exception — flagged via ``wire_is_modeled`` so the cost
-model and dry-run reports can say so.
+int8 container.  The sparsifiers ship a fixed-capacity ``{values: fp32/fp16,
+indices}`` payload whose block-local indices ride the same stream layout at
+``ceil(log2(block))`` bits each — there is no dense tensor left in any
+payload, and no modeled figure left in the registry.  For every operator,
+``wire_bits_per_element`` is derived from the payload's container sizes via
+``jax.eval_shape`` on ``compress`` (model == measured by construction;
+asserted in tests/test_compression.py).
 
 All operators are pure functions of a PRNG key: jit/vmap/shard_map friendly.
 """
@@ -48,6 +55,10 @@ from repro.kernels.ref import (
     assert_packable,
     pack_codes,
     packed_auto,
+    sparse_geometry,
+    sparse_scatter_2d_ref,
+    sparse_select_pack_2d_ref,
+    sparse_unpack_idx,
     unpack_codes,
 )
 
@@ -230,33 +241,121 @@ class RandomQuantizer(Compressor):
 
 
 @dataclasses.dataclass(frozen=True)
-class RandomSparsifier(Compressor):
-    """Randomized sparsification: keep w.p. ``p``, rescale kept values by ``1/p``."""
+class _SparseCodecCompressor(Compressor):
+    """Shared machinery of the fixed-capacity sparsifiers.
+
+    Wire format (per ``block_size``-element block, real containers — no dense
+    tensor, no modeled figure):
+
+    * ``values``: the ``k = ceil(p * block)`` kept values, fp32 or fp16.
+    * ``idx``: their block-local indices, bit-packed to ``ceil(log2(block))``
+      bits each via the kernels/quant.py stream layout (raw unsigned fields),
+      zero-padded to whole stream groups.
+
+    The payload shapes are fixed functions of (p, block) — SPMD-friendly: no
+    data-dependent shapes reach the compiled program.  ``use_kernel=True``
+    routes through the fused Pallas select+gather+pack kernel; the default
+    pure-jnp path is the reference semantics (kernels/ref.py, same selection
+    order, word-for-word identical payloads).
+    """
 
     p: float = 0.25
-    name: str = "sparsify"
+    block_size: int = 128
+    value_dtype: str = "float32"    # "float32" | "float16" (wire container)
+    use_kernel: bool = False
+    mode: str = "randk"
 
-    def compress(self, key, x):
-        x = x.astype(jnp.float32)
-        mask = jax.random.bernoulli(key, self.p, x.shape)
-        return {"values": jnp.where(mask, x / self.p, 0.0)}
-
-    def decompress(self, payload, like):
-        return payload["values"].reshape(like.shape).astype(like.dtype)
-
-    def wire_bits_per_element(self, shape=None) -> float:
-        # MODELED, not measured: an idealized (value + index) sparse codec.  The
-        # in-memory payload is dense fp32 (sharding-friendly); a real sparse
-        # wire codec is an open item in ROADMAP.md.
-        return self.p * 64.0
+    def __post_init__(self):
+        assert 0.0 < self.p <= 1.0, f"keep fraction p must be in (0, 1], got {self.p}"
+        assert self.value_dtype in ("float32", "float16"), self.value_dtype
 
     @property
-    def wire_is_modeled(self) -> bool:
-        return True
+    def _vdtype(self):
+        return jnp.float16 if self.value_dtype == "float16" else jnp.float32
+
+    def _block_for(self, n: int) -> int:
+        return min(self.block_size, max(n, 1))
+
+    def _keep_fraction(self, n: int) -> float:
+        """The *effective* keep fraction k/block (>= p because k is a ceil)."""
+        block = self._block_for(n)
+        k, _, _, _ = sparse_geometry(block, self.p)
+        return k / block
+
+    def compress(self, key, x):
+        n = x.size
+        bs = self._block_for(n)
+        # kernel and jnp paths share the SAME shrunken block geometry, so they
+        # emit identical payloads for every n; a shrunken block off the
+        # kernel's 128-lane contract stays on the jnp reference path (the
+        # quantizer's small-block fallback, sparse edition)
+        if self.use_kernel and bs % 128 == 0:
+            from repro.kernels import ops as kops
+
+            return kops.sparse_compress(key, x, p=self.p, block_size=bs,
+                                        mode=self.mode, value_dtype=self._vdtype)
+        x = x.astype(jnp.float32)
+        pad = (-n) % bs
+        blocks = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, bs)
+        seed = jax.random.bits(key, (1,), dtype=jnp.uint32)
+        vals, idx = sparse_select_pack_2d_ref(blocks, seed, p=self.p,
+                                              mode=self.mode,
+                                              value_dtype=self._vdtype)
+        return {"values": vals, "idx": idx}
+
+    def decompress(self, payload, like):
+        n = int(np.prod(like.shape)) if like.shape else 1
+        bs = self._block_for(n)
+        k = payload["values"].shape[-1]
+        idx = sparse_unpack_idx(payload["idx"], block=bs, k=k)
+        dense = sparse_scatter_2d_ref(payload["values"], idx, cols=bs)
+        return dense.reshape(-1)[:n].reshape(like.shape).astype(like.dtype)
+
+    def wire_bits_per_element(self, shape=None) -> float:
+        # derived from the payload's real container sizes (values + packed
+        # index words), not a formula — same honesty contract as the quantizer
+        n = int(np.prod(shape)) if shape is not None else self.block_size
+        return _measured_wire_bits(self, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomSparsifier(_SparseCodecCompressor):
+    """Fixed-capacity random-k sparsification.
+
+    Every block keeps a seeded uniform ``k = ceil(p * block)``-subset (the k
+    largest counter-based PCG hash priorities — the hash is a bijection, so
+    priorities are distinct and the subset is a uniform pseudo-random
+    k-subset), rescaled by ``block/k``.  Inclusion probability is exactly
+    ``k/block`` per coordinate, so ``E[C(z)] = z`` — the unbiased
+    fixed-capacity form of the paper's Bernoulli random sparsification,
+    with the same error moment ``E||C(z)-z||² = (1/p_eff - 1)||z||²``.
+    """
+
+    name: str = "sparsify"
+    mode: str = "randk"
 
     def alpha_bound(self) -> float:
-        # E||C(z)-z||² = (1/p - 1)||z||²  => alpha = sqrt(1/p - 1)
-        return float(np.sqrt(1.0 / self.p - 1.0))
+        # E||C(z)-z||² = (1/p_eff - 1)||z||²  => alpha = sqrt(1/p_eff - 1)
+        return float(np.sqrt(1.0 / self._keep_fraction(self.block_size) - 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSparsifier(_SparseCodecCompressor):
+    """Fixed-capacity top-k by magnitude (ties broken toward smaller index).
+
+    Deterministic and *biased* (``E[C(z)] != z`` in general), but its
+    compression error is bounded without any rescaling:
+    ``||z - C(z)||² <= (1 - k/n) ||z||²`` (the discarded coordinates are the
+    n-k smallest squares, each at most the block mean), which is the
+    signal-to-noise bound the DCD theory hook consumes.
+    """
+
+    name: str = "topk"
+    mode: str = "topk"
+
+    def alpha_bound(self) -> float:
+        # worst case (all-equal magnitudes): ||z - C(z)||² = (1 - k/n)||z||²
+        return float(np.sqrt(1.0 - self._keep_fraction(self.block_size)))
 
 
 def measured_alpha(comp: Compressor, key: jax.Array, z: jax.Array, n_samples: int = 16) -> float:
@@ -270,6 +369,7 @@ REGISTRY = {
     "identity": lambda **kw: IdentityCompressor(),
     "quant": lambda **kw: RandomQuantizer(**kw),
     "sparsify": lambda **kw: RandomSparsifier(**kw),
+    "topk": lambda **kw: TopKSparsifier(**kw),
 }
 
 

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -31,15 +32,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import payload_nbytes as _payload_nbytes
-from repro.kernels.quant import uniform_from_hash, unpack_dequant_axpy_2d
+from repro.kernels.quant import (
+    pcg_hash,
+    sparse_scatter_axpy_2d,
+    uniform_from_hash,
+    unpack_dequant_axpy_2d,
+)
 from repro.kernels.ref import (
+    SPARSE_MODES,
     aligned_block,
     assert_packable,
     pack_codes,
     packed_auto,
+    sparse_geometry,
+    sparse_pack_idx,
+    sparse_unpack_idx,
     unpack_codes,
 )
 from repro.optim.optimizers import Optimizer, apply_updates
+
+
+def _block_counters(xb: jax.Array) -> jax.Array:
+    """Per-element flat counter of a blocked view, from per-dim iotas
+    (elementwise => sharding-friendly).  Counters live in uint32 (mod 2^32):
+    >4B-element leaves reuse counter values, which only correlates the
+    randomness of far-apart element pairs — harmless for unbiasedness."""
+    idx = jnp.zeros(xb.shape, jnp.uint32)
+    stride = 1
+    for d in range(xb.ndim - 1, -1, -1):
+        idx = idx + jax.lax.broadcasted_iota(jnp.uint32, xb.shape, d) * \
+            jnp.uint32(stride % (1 << 32))
+        stride *= xb.shape[d]
+    return idx
 
 
 def _quantize_nd(x: jax.Array, seed: jax.Array, *, bits: int, block: int):
@@ -60,17 +84,7 @@ def _quantize_nd(x: jax.Array, seed: jax.Array, *, bits: int, block: int):
     scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
     safe = jnp.where(scale > 0.0, scale, 1.0)
     v = xb * (levels / safe)
-    # per-element counter from per-dim iotas (elementwise => sharding-friendly)
-    idx = jnp.zeros(xb.shape, jnp.uint32)
-    stride = 1
-    for d in range(xb.ndim - 1, -1, -1):
-        # counters live in uint32 (mod 2^32): >4B-element leaves reuse counter
-        # values, which only correlates the stochastic rounding of far-apart
-        # element pairs — harmless for unbiasedness (E[C(z)] = z elementwise)
-        idx = idx + jax.lax.broadcasted_iota(jnp.uint32, xb.shape, d) * \
-            jnp.uint32(stride % (1 << 32))
-        stride *= xb.shape[d]
-    u = uniform_from_hash(idx, seed)
+    u = uniform_from_hash(_block_counters(xb), seed)
     floor = jnp.floor(v)
     q = floor + (u < (v - floor)).astype(jnp.float32)
     return jnp.clip(q, -levels, levels).astype(jnp.int8), scale
@@ -82,6 +96,56 @@ def _dequantize_nd(codes: jax.Array, scale: jax.Array, *, bits: int,
     # reciprocal multiply == the kernels' dequant formulation (see kernels/ref.py)
     vals = codes.astype(jnp.float32) * (scale * jnp.float32(1.0 / levels))
     out = vals.reshape(*vals.shape[:-2], vals.shape[-2] * vals.shape[-1])
+    return out[..., :orig_last].astype(dtype)
+
+
+def _sparsify_nd(x: jax.Array, seed: jax.Array, *, p: float, block: int,
+                 mode: str, value_dtype=jnp.float32):
+    """Fixed-capacity sparse selection with blocks along the LAST dim only.
+
+    Sharding-preserving exactly like :func:`_quantize_nd`: leading dims keep
+    their partitioning, and the selection (a stable argsort + gather along the
+    block axis) never mixes elements across blocks.  Canonical selection order
+    — descending key, ties toward the smaller index — matches the kernels and
+    the kernels/ref.py oracle word for word (same PCG counters for randk).
+    """
+    k, _, kpad, _ = sparse_geometry(block, p)
+    last = x.shape[-1]
+    pad = (-last) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = x.reshape(*x.shape[:-1], (last + pad) // block, block).astype(jnp.float32)
+    if mode == "randk":
+        key = pcg_hash(_block_counters(xb) ^ seed)
+        order = jnp.argsort(key ^ jnp.uint32(0xFFFFFFFF), axis=-1, stable=True)
+    else:
+        order = jnp.argsort(-jnp.abs(xb), axis=-1, stable=True)
+    sel = order[..., :k]
+    vals = jnp.take_along_axis(xb, sel, axis=-1)
+    if mode == "randk":
+        vals = vals * jnp.float32(block / k)   # inclusion prob k/block => unbiased
+    return vals.astype(value_dtype), \
+        sparse_pack_idx(sel.astype(jnp.uint32), block=block, kpad=kpad)
+
+
+def _sparse_scatter_nd(values: jax.Array, packed_idx: jax.Array, *, block: int,
+                       orig_last: int, dtype) -> jax.Array:
+    """Inverse of :func:`_sparsify_nd`: scatter each block's values back into
+    a dense last dim.  Indices within a block are duplicate-free, so each
+    output lane receives at most one value — the one-hot contraction below is
+    bit-exact regardless of reduction order.  It intentionally restates
+    ``sparse_scatter_2d_ref`` over the *unreshaped* leading dims: folding them
+    into rows would reshape across the sharded node axis, which is exactly
+    what this sharding-preserving path exists to avoid (same split as
+    ``_dequantize_nd`` vs ``dequantize_2d_ref``)."""
+    k = values.shape[-1]
+    idx = sparse_unpack_idx(packed_idx, block=block, k=k)
+    lanes = jax.lax.broadcasted_iota(
+        jnp.uint32, idx.shape[:-1] + (1, block), idx.ndim)
+    hit = idx[..., :, None].astype(jnp.uint32) == lanes
+    dense = jnp.sum(
+        jnp.where(hit, values[..., :, None].astype(jnp.float32), 0.0), axis=-2)
+    out = dense.reshape(*dense.shape[:-2], dense.shape[-2] * block)
     return out[..., :orig_last].astype(dtype)
 
 
@@ -151,6 +215,10 @@ class WireCodec:
             outs.append(_dequantize_nd(codes, payload["scale"], bits=self.bits,
                                        orig_last=like.shape[-1], dtype=like.dtype))
         return jax.tree_util.tree_unflatten(treedef, outs)
+
+    @property
+    def wire_format(self) -> str:
+        return "packed-stream-u32" if self.packed else "int8"
 
     def wire_bits_per_element(self) -> float:
         """Asymptotic wire bits/element for leaves whose last dim fills whole
@@ -229,18 +297,159 @@ def _fused_axpy_leaf(codes: jax.Array, scale: jax.Array, acc: jax.Array, *,
 
 
 @dataclasses.dataclass(frozen=True)
+class SparseWireCodec:
+    """Sparse wire format for one pytree, vmapped over the node axis.
+
+    The fixed-capacity counterpart of :class:`WireCodec`: every
+    ``block``-element block of a leaf's last dim keeps ``k = ceil(p * block)``
+    values (``randk``: a seeded uniform k-subset rescaled by ``block/k``;
+    ``topk``: the k largest magnitudes), and the stacked payload the ring
+    collective-permute moves is ``{values: (n, ..., nblk, k) fp32/fp16,
+    idx: (n, ..., nblk, words) uint32}`` — the block-local indices bit-packed
+    to ``ceil(log2(block))`` bits each via the same stream layout as the
+    quantized codec.  Fixed capacity keeps every shape static (SPMD-friendly:
+    one collective-permute per leaf, no data-dependent sizes), and blocking
+    along the last dim only preserves leading-dim sharding exactly like
+    ``_quantize_nd``.
+
+    Seeding matches :class:`WireCodec` — (step, salt, leaf index) through the
+    same PCG hash — so the stacked reference driven through
+    :class:`WireCompressor` produces bit-identical payloads (indices included)
+    to the sharded runtime; the differential tier asserts it.
+    """
+
+    p: float = 0.25
+    block: int = 128
+    mode: str = "randk"
+    value_dtype: str = "float32"    # "float32" | "float16" (wire container)
+
+    def __post_init__(self):
+        assert 0.0 < self.p <= 1.0, f"keep fraction p must be in (0, 1], got {self.p}"
+        assert self.mode in SPARSE_MODES, self.mode
+        assert self.value_dtype in ("float32", "float16"), self.value_dtype
+
+    @property
+    def packed(self) -> bool:
+        """The index stream is always bit-packed — there is no unpacked
+        container for this codec (``make_dist_train_step`` keys its fused
+        default off this, like the packed quantized codec)."""
+        return True
+
+    @property
+    def wire_format(self) -> str:
+        vals = "f16" if self.value_dtype == "float16" else "f32"
+        return f"sparse-{self.mode}-{vals}+packed-idx-u32"
+
+    @property
+    def _vdtype(self):
+        return jnp.float16 if self.value_dtype == "float16" else jnp.float32
+
+    def _block_for(self, last: int) -> int:
+        return min(self.block, max(last, 1))
+
+    def encode(self, tree: Any, step: jax.Array, salt: int) -> Any:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = []
+        for li, leaf in enumerate(leaves):
+            seed = (step.astype(jnp.uint32) * jnp.uint32(2654435761)
+                    ^ jnp.uint32(salt * 97 + li))
+            block = self._block_for(leaf.shape[-1])
+            vals, idx = _sparsify_nd(leaf, seed, p=self.p, block=block,
+                                     mode=self.mode, value_dtype=self._vdtype)
+            out.append({"values": vals, "idx": idx})
+        return treedef, out
+
+    def decode(self, treedef, payloads, like_tree: Any) -> Any:
+        likes = jax.tree_util.tree_leaves(like_tree)
+        outs = []
+        for payload, like in zip(payloads, likes):
+            outs.append(_sparse_scatter_nd(
+                payload["values"], payload["idx"],
+                block=self._block_for(like.shape[-1]),
+                orig_last=like.shape[-1], dtype=like.dtype))
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def wire_bits_per_element(self) -> float:
+        """Asymptotic wire bits/element for leaves whose last dim fills whole
+        blocks, from the real container sizes: k values plus the packed index
+        words.  Use :meth:`payload_nbytes` for the measured per-tree number
+        (the dryrun records that, not this)."""
+        k, _, _, words = sparse_geometry(self.block, self.p)
+        vbits = 16 if self.value_dtype == "float16" else 32
+        return (k * vbits + words * 32) / self.block
+
+    def payload_nbytes(self, tree: Any) -> int:
+        """Measured wire bytes of one encoded gossip payload for ``tree``
+        (shape-only: evaluated via eval_shape, nothing is computed)."""
+        payloads = jax.eval_shape(
+            lambda t: self.encode(t, jnp.zeros((), jnp.int32), salt=0)[1], tree)
+        return _payload_nbytes(payloads)
+
+    def decode_axpy(self, treedef, payloads, acc_tree: Any, weight,
+                    acc_weight=1.0) -> Any:
+        """``acc_weight * acc + weight * decode(payloads)`` leafwise, as ONE
+        fused Pallas kernel per leaf: unpack the index stream -> scatter ->
+        scale-and-accumulate in a single VMEM pass (the reconstructed dense
+        fp32 neighbor delta never lands in HBM).  Same gating as the quantized
+        codec: leaves whose block misses the 128-lane kernel contract take the
+        jnp reference path."""
+        accs = jax.tree_util.tree_leaves(acc_tree)
+        outs = []
+        for payload, acc in zip(payloads, accs):
+            block = self._block_for(acc.shape[-1])
+            if block % 128 == 0:
+                outs.append(_fused_sparse_axpy_leaf(
+                    payload["values"], payload["idx"], acc, block=block,
+                    weight=weight, acc_weight=acc_weight))
+            else:
+                d = _sparse_scatter_nd(payload["values"], payload["idx"],
+                                       block=block, orig_last=acc.shape[-1],
+                                       dtype=jnp.float32)
+                outs.append((acc_weight * acc + weight * d).astype(acc.dtype))
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def _fused_sparse_axpy_leaf(values: jax.Array, packed_idx: jax.Array,
+                            acc: jax.Array, *, block: int, weight,
+                            acc_weight=1.0) -> jax.Array:
+    """One leaf of :meth:`SparseWireCodec.decode_axpy` through the fused
+    kernel: fold (lead..., nblk, k) into a (lead*nblk, k) 2-D view — the
+    leading (node) axis stays outermost, so the fold preserves leading-dim
+    sharding under shard_map, exactly like :func:`_fused_axpy_leaf`."""
+    nblk = values.shape[-2]
+    lead = acc.shape[:-1]
+    orig_last = acc.shape[-1]
+    accf = acc.astype(jnp.float32)
+    pad = nblk * block - orig_last
+    if pad:
+        accf = jnp.pad(accf, [(0, 0)] * (accf.ndim - 1) + [(0, pad)])
+    rows = int(np.prod(lead, dtype=np.int64)) * nblk
+    out = sparse_scatter_axpy_2d(
+        values.reshape(rows, values.shape[-1]),
+        packed_idx.reshape(rows, packed_idx.shape[-1]),
+        accf.reshape(rows, block),
+        weight=weight, acc_weight=acc_weight,
+        interpret=jax.default_backend() != "tpu")
+    out = out.reshape(*lead, nblk * block)[..., :orig_last]
+    return out.astype(acc.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
 class WireCompressor:
     """Adapter: the stacked reference algorithms in :mod:`repro.core.algorithms`
-    driven by a :class:`WireCodec`'s deterministic PCG quantization.
+    driven by a codec's deterministic PCG compression (quantized
+    :class:`WireCodec` or :class:`SparseWireCodec` — anything with the
+    ``encode``/``decode`` tree protocol).
 
     The reference steps call ``comp.tree_apply(key, tree)``; here the ``key``
     slot carries the *step counter* of the matching sharded run, so both runs
     derive identical per-leaf seeds (step, salt, leaf index) and produce
-    bit-identical codes.  The differential test tier pins the sharded DCD/ECD
-    runtime against the stacked semantics through this adapter.
+    bit-identical codes — packed sparse indices included.  The differential
+    test tier pins the sharded DCD/ECD runtime against the stacked semantics
+    through this adapter.
     """
 
-    codec: WireCodec
+    codec: Any
     salt: int
     name: str = "wire"
 
@@ -349,26 +558,34 @@ def init_dist_state(algo: str, params_single: Any, n_nodes: int, opt: Optimizer,
 
 # --------------------------------------------------------------- the step
 
-def _make_decode_axpy(codec: WireCodec, mesh) -> Optional[Callable]:
+def _make_decode_axpy(codec, mesh) -> Optional[Callable]:
     """Fused receive path, wrapped in shard_map over the node axis when a mesh
-    is given.  Each shard hands its local slab of the stacked payload (codes +
-    scales) and accumulator straight to the fused Pallas kernel.
+    is given.  Each shard hands its local slab of the stacked payload
+    (codes + scales, or sparse values + packed index words) and accumulator
+    straight to the fused Pallas kernel.
 
     Returns ``None`` for meshes with axes beyond "node": wrapping only the
     node axis would force GSPMD to gather every fsdp/model-sharded leaf at the
     shard_map boundary (the §Perf-iteration-3 regression this runtime exists
     to avoid), and shard_map's ``auto`` escape hatch for the remaining axes
     check-fails inside XLA's SPMD partitioner on the current pin — the caller
-    then keeps the sharding-preserving jnp reference codec (an open ROADMAP
-    item tracks lifting this once ``auto`` is usable).
+    then keeps the sharding-preserving jnp reference codec.  Setting
+    ``REPRO_SHARD_MAP_AUTO=1`` opts the multi-axis case into the ``auto``
+    path anyway — the CI ``jax-nightly`` probe (tests/probe_shard_map_auto.py)
+    uses it to re-test the check-fail on newer XLA pins (ROADMAP item).
     """
     if mesh is None or "node" not in getattr(mesh, "axis_names", ()):
         return codec.decode_axpy
-    if any(a != "node" for a in mesh.axis_names):
+    nonnode = frozenset(a for a in mesh.axis_names if a != "node")
+    auto_opt_in = os.environ.get("REPRO_SHARD_MAP_AUTO", "").lower() \
+        not in ("", "0", "false")
+    if nonnode and not auto_opt_in:
         return None
 
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    kwargs = {"auto": nonnode} if nonnode else {}
 
     def dec_axpy(treedef, payloads, acc_tree, weight, acc_weight=1.0):
         def inner(payloads_, acc_, w_, aw_):
@@ -377,7 +594,7 @@ def _make_decode_axpy(codec: WireCodec, mesh) -> Optional[Callable]:
         return shard_map(
             inner, mesh,
             in_specs=(P("node"), P("node"), P(), P()),
-            out_specs=P("node"), check_rep=False,
+            out_specs=P("node"), check_rep=False, **kwargs,
         )(payloads, acc_tree, jnp.asarray(weight, jnp.float32),
           jnp.asarray(acc_weight, jnp.float32))
 
@@ -388,7 +605,7 @@ def make_dist_train_step(
     loss_fn: Callable[[Any, Any], Tuple[jax.Array, Dict]],
     algo: str,
     opt: Optimizer,
-    codec: Optional[WireCodec],
+    codec: Optional[Any],    # WireCodec | SparseWireCodec | None
     n_nodes: int,
     lr_schedule: Callable[[jax.Array], jax.Array],
     topology: str = "ring",
@@ -404,9 +621,10 @@ def make_dist_train_step(
     better spectral gap at large n at 2x the payload rounds).
 
     ``fused`` (default: auto — on iff the codec packs) routes every DCD/ECD
-    receive-side decode through the fused ``unpack_dequant_axpy`` Pallas kernel
-    (one VMEM pass: unpack -> dequantize -> accumulate) instead of the jnp
-    reference codec + XLA fusion.  When ``mesh`` (a pure node-axis mesh) is
+    receive-side decode through the fused axpy Pallas kernel —
+    ``unpack_dequant_axpy`` for the quantized codec, ``sparse_scatter_axpy``
+    for the sparse one (one VMEM pass: unpack -> dequantize/scatter ->
+    accumulate) — instead of the jnp reference codec + XLA fusion.  When ``mesh`` (a pure node-axis mesh) is
     given, the fused decode runs under ``shard_map`` so each shard feeds its
     local payload slab straight into the kernel; without a mesh the kernel is
     called inline (single-process runs).  Multi-axis meshes fall back to the

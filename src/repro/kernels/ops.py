@@ -12,6 +12,13 @@ same wire format as :class:`repro.core.compression.RandomQuantizer`:
 The payload's ``codes.dtype`` is therefore self-describing: uint32 means packed.
 ``payload_nbytes`` is the honest wire cost used by the netsim cost model and the
 benchmarks.
+
+The sparse codec rides the same contract: ``sparse_compress`` returns
+``{values: (n_blocks, k) fp16/fp32, idx: (n_blocks, words) uint32}`` — the
+fixed-capacity top-k / rescaled random-k payload with the block-local indices
+bit-packed to ``idx_bits_for(block_size)`` bits each (kernels/quant.py stream
+layout, raw unsigned fields).  Same wire format as
+:class:`repro.core.compression.RandomSparsifier` / ``TopKSparsifier``.
 """
 from __future__ import annotations
 
@@ -76,6 +83,51 @@ def dequantize(payload: dict, *, bits: int = 8, shape: tuple = (), dtype: Any = 
                                interpret=_interpret())
     n = int(np.prod(shape)) if shape else 1
     return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "block_size", "mode", "value_dtype"))
+def sparse_compress(key: jax.Array, x: jax.Array, *, p: float = 0.25,
+                    block_size: int = 128, mode: str = "randk",
+                    value_dtype: Any = jnp.float32) -> dict:
+    """Fixed-capacity sparsification of any-shaped ``x`` into {values, idx}.
+
+    Per ``block_size``-element block, ``k = ceil(p * block_size)`` values are
+    kept (``randk``: a seeded uniform k-subset, rescaled by ``block/k``;
+    ``topk``: the k largest magnitudes, unscaled) through the fused
+    select+gather+pack kernel — only the k values and the ~``k * idx_bits``
+    index bits ever leave it.
+    """
+    assert block_size % 128 == 0
+    seed = jax.random.bits(key, (1,), dtype=jnp.uint32)
+    blocks = _to_blocks(x, block_size)
+    vals, idx = _q.sparse_select_pack_2d(blocks, seed, p=p, mode=mode,
+                                         value_dtype=value_dtype,
+                                         interpret=_interpret())
+    return {"values": vals, "idx": idx}
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "shape", "dtype"))
+def sparse_decompress(payload: dict, *, block_size: int = 128, shape: tuple = (),
+                      dtype: Any = jnp.float32) -> jax.Array:
+    out = _q.sparse_unpack_scatter_2d(payload["values"], payload["idx"],
+                                      cols=block_size, interpret=_interpret())
+    n = int(np.prod(shape)) if shape else 1
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def sparse_axpy(payload: dict, acc: jax.Array, *, block_size: int,
+                weight: float) -> jax.Array:
+    """Fused sparse receive path: ``acc + weight * sparse_decompress(payload)``.
+
+    One kernel pass — unpack the index stream, scatter, and accumulate in
+    VMEM; the reconstructed dense fp32 tensor never lands in HBM.
+    """
+    blocks = _to_blocks(acc, block_size)
+    out = _q.sparse_scatter_axpy_2d(payload["values"], payload["idx"], blocks,
+                                    weight=weight, interpret=_interpret())
+    n = acc.size
+    return out.reshape(-1)[:n].reshape(acc.shape).astype(acc.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bits",))

@@ -59,8 +59,28 @@ TPU adaptation notes (vs. a CUDA quantizer):
 * Pack/unpack is shift-and-OR over the biased codes — pure VPU integer ops on
   lane-aligned slices, fused into the same grid step as the quantize/dequantize.
 
+A third kernel family ships the *sparse* wire format (fixed-capacity top-k /
+rescaled random-k: ``k = ceil(p * cols)`` values + their block-local indices
+packed to ``idx_bits_for(cols)`` bits via the same stream layout, raw unsigned
+fields, no sign bias):
+
+* ``sparse_select_pack_2d``   — selection (iterative first-occurrence argmax,
+  ``k`` unrolled row reductions: descending key, ties to the smaller index —
+  the exact order of the stable-argsort oracle in kernels/ref.py), gather, and
+  index bit-pack in one VMEM pass; only ``k`` values + ``~k*idx_bits`` index
+  bits leave the kernel.
+* ``sparse_unpack_scatter_2d`` / ``sparse_scatter_axpy_2d`` — the receive
+  side: unpack the index stream and scatter each value into its lane via
+  ``k`` unrolled lane-compare selects (``out[lane] += where(lane == idx_i,
+  w*val_i, 0)``) — a dense one-hot contraction, O(k*cols) VPU work, chosen
+  over a real scatter because the TPU VPU has no cheap strided lane store;
+  the axpy variant folds ``acc_weight * acc`` into the same pass exactly like
+  ``unpack_dequant_axpy_2d``.  Indices within a row are duplicate-free, so
+  every lane receives at most one value and the accumulation order cannot
+  change the result.
+
 Validated against kernels/ref.py (pure jnp, same hash, same word layout) in
-tests/test_kernels.py.
+tests/test_kernels.py and tests/test_wire_format.py.
 """
 from __future__ import annotations
 
@@ -73,6 +93,8 @@ from jax.experimental import pallas as pl
 
 PACKABLE_BITS = (2, 3, 4, 5, 6, 7)
 
+SPARSE_MODES = ("randk", "topk")
+
 
 def stream_geometry(bits: int) -> tuple:
     """(codes per group, words per group) of the v2 stream layout — the single
@@ -80,6 +102,29 @@ def stream_geometry(bits: int) -> tuple:
     the module docstring."""
     l = math.lcm(bits, 32)
     return l // bits, l // 32
+
+
+def idx_bits_for(block: int) -> int:
+    """Bits needed to address one element of a ``block``-wide row (>= 1)."""
+    return max(1, (block - 1).bit_length())
+
+
+def sparse_geometry(block: int, p: float) -> tuple:
+    """(k, idx_bits, kpad, words) of the fixed-capacity sparse wire format.
+
+    ``k = ceil(p * block)`` values are kept per block; their block-local
+    indices pack to ``idx_bits = ceil(log2(block))`` bits each via the stream
+    layout above, padded to ``kpad`` (a whole number of stream groups,
+    zero-filled tail) so the index container is ``words`` whole uint32 words.
+    The payload is fixed-capacity — the same (k, words) for every input — so
+    the codec is SPMD-friendly: no data-dependent shapes ever reach the
+    compiled program.
+    """
+    k = min(block, max(1, math.ceil(p * block)))
+    w = idx_bits_for(block)
+    cpg, _ = stream_geometry(w)
+    kpad = -(-k // cpg) * cpg
+    return k, w, kpad, kpad * w // 32
 
 
 def pcg_hash(x: jax.Array) -> jax.Array:
@@ -353,4 +398,200 @@ def unpack_dequant_axpy_2d(packed: jax.Array, scale: jax.Array, acc: jax.Array, 
         out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
         interpret=interpret,
     )(weights, packed, scale.astype(jnp.float32), acc.astype(jnp.float32))
+    return out[:rows] if pad else out
+
+
+# --------------------------------------------------------------- sparse codec
+
+def _sparse_select_pack_kernel(seed_ref, x_ref, vals_ref, idx_ref, *, mode: str,
+                               k: int, kpad: int, idx_bits: int,
+                               block_rows: int, cols: int, value_dtype):
+    """Fused select + gather + index-pack for one (block_rows, cols) tile.
+
+    Selection is ``k`` unrolled rounds of masked row argmax with
+    first-occurrence (smallest-index) tie-break — the canonical order shared
+    with the stable-argsort oracle — followed by the same shift-and-OR stream
+    pack as the quantizer, over raw ``idx_bits``-wide unsigned fields.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    if mode == "randk":
+        rows = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0) \
+            + (pl.program_id(0) * block_rows).astype(jnp.uint32)
+        key = pcg_hash((rows * jnp.uint32(cols) + lanes) ^ seed_ref[0])
+        sentinel = jnp.uint32(0)
+    else:
+        mag = jnp.abs(x)
+        # NaN ranks below every real magnitude but above masked-out lanes —
+        # the iterative argmax then selects NaN lanes last, in ascending index
+        # order, exactly where the oracle's total-order sort (NaN last) puts
+        # them; a bare max() would NaN-poison the whole block instead
+        key = jnp.where(jnp.isnan(mag), jnp.float32(-0.5), mag)
+        sentinel = jnp.float32(-1.0)    # key >= -0.5: never shadows a live lane
+    valid = jnp.ones(x.shape, jnp.bool_)
+    val_cols, sel_cols = [], []
+    for _ in range(k):
+        masked = jnp.where(valid, key, sentinel)
+        m = jnp.max(masked, axis=1, keepdims=True)
+        sel = jnp.min(jnp.where(valid & (masked == m), lanes, jnp.uint32(cols)),
+                      axis=1, keepdims=True)
+        hit = lanes == sel
+        val_cols.append(jnp.sum(jnp.where(hit, x, 0.0), axis=1, keepdims=True))
+        sel_cols.append(sel)
+        valid = valid & ~hit
+    vals = jnp.concatenate(val_cols, axis=1)
+    if mode == "randk":
+        vals = vals * jnp.float32(cols / k)   # inclusion prob k/cols => unbiased
+    vals_ref[...] = vals.astype(value_dtype)
+
+    if kpad > k:   # container padding to whole stream groups (dropped on unpack)
+        sel_cols = sel_cols + [jnp.zeros((x.shape[0], 1), jnp.uint32)] * (kpad - k)
+    u = jnp.concatenate(sel_cols, axis=1)
+    cpg, wpg = stream_geometry(idx_bits)
+    g = kpad // cpg
+    words = [jnp.zeros(u.shape[:-1] + (g,), jnp.uint32) for _ in range(wpg)]
+    for j in range(cpg):
+        w, off = divmod(j * idx_bits, 32)
+        uj = u[:, j * g:(j + 1) * g]
+        words[w] = words[w] | (uj << jnp.uint32(off))
+        if off + idx_bits > 32:
+            words[w + 1] = words[w + 1] | (uj >> jnp.uint32(32 - off))
+    for w in range(wpg):
+        idx_ref[:, w * g:(w + 1) * g] = words[w]
+
+
+def _sparse_idx_entries(word, *, k: int, idx_bits: int):
+    """Yield (entry i, (rows, 1) uint32 block-local index) from packed words."""
+    cpg, wpg = stream_geometry(idx_bits)
+    g = word.shape[-1] // wpg
+    mask = jnp.uint32((1 << idx_bits) - 1)
+    planes = [word[:, w * g:(w + 1) * g] for w in range(wpg)]
+    fields = {}
+    for j in range(cpg):
+        w, off = divmod(j * idx_bits, 32)
+        v = planes[w] >> jnp.uint32(off)
+        if off + idx_bits > 32:
+            v = v | (planes[w + 1] << jnp.uint32(32 - off))
+        fields[j] = v & mask
+    for i in range(k):   # entry i lives in group i % g at stream position i // g
+        yield i, fields[i // g][:, i % g:i % g + 1]
+
+
+def _sparse_scatter_kernel(vals_ref, idx_ref, out_ref, *, k: int, idx_bits: int):
+    out = jnp.zeros(out_ref.shape, jnp.float32)
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, out.shape, 1)
+    for i, idx_i in _sparse_idx_entries(idx_ref[...], k=k, idx_bits=idx_bits):
+        val_i = vals_ref[:, i:i + 1].astype(jnp.float32)
+        out = out + jnp.where(lanes == idx_i, val_i, 0.0)
+    out_ref[...] = out
+
+
+def _sparse_scatter_axpy_kernel(weights_ref, vals_ref, idx_ref, acc_ref, out_ref,
+                                *, k: int, idx_bits: int):
+    # weights_ref = [acc_weight, weight], exactly like _unpack_dequant_axpy_kernel
+    out = weights_ref[0] * acc_ref[...].astype(jnp.float32)
+    wt = weights_ref[1]
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, out.shape, 1)
+    for i, idx_i in _sparse_idx_entries(idx_ref[...], k=k, idx_bits=idx_bits):
+        val_i = vals_ref[:, i:i + 1].astype(jnp.float32)
+        out = out + jnp.where(lanes == idx_i, wt * val_i, 0.0)
+    out_ref[...] = out
+
+
+def sparse_select_pack_2d(x: jax.Array, seed: jax.Array, *, p: float, mode: str,
+                          value_dtype=jnp.float32, interpret: bool = False):
+    """Fused fixed-capacity selection of a (rows, cols) f32 array.
+
+    Returns (values (rows, k) ``value_dtype``, packed indices (rows, words)
+    uint32) with ``k, words`` from ``sparse_geometry(cols, p)`` — identical
+    word-for-word to the kernels/ref.py oracle for the same seed.
+    ``cols % 128 == 0`` (lane contract), like the quantize kernels.
+    """
+    rows, cols = x.shape
+    assert cols % 128 == 0, f"block_size must be a multiple of 128, got {cols}"
+    assert mode in SPARSE_MODES, f"sparse modes are {SPARSE_MODES}, got {mode}"
+    k, idx_bits, kpad, w_idx = sparse_geometry(cols, p)
+    bm = _pick_block_rows(rows, cols)
+    (x,), pad = _pad_rows([x], bm, rows)
+    grid = ((rows + pad) // bm,)
+    kernel = functools.partial(
+        _sparse_select_pack_kernel, mode=mode, k=k, kpad=kpad, idx_bits=idx_bits,
+        block_rows=bm, cols=cols, value_dtype=value_dtype)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, w_idx), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows + pad, k), value_dtype),
+            jax.ShapeDtypeStruct((rows + pad, w_idx), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.uint32), x.astype(jnp.float32))
+    if pad:
+        vals, idx = vals[:rows], idx[:rows]
+    return vals, idx
+
+
+def sparse_unpack_scatter_2d(values: jax.Array, packed: jax.Array, *, cols: int,
+                             interpret: bool = False) -> jax.Array:
+    """Fused unpack + scatter: k values + packed index words -> (rows, cols) f32."""
+    rows, k = values.shape
+    idx_bits = idx_bits_for(cols)
+    bm = _pick_block_rows(rows, cols)
+    (values, packed), pad = _pad_rows([values, packed], bm, rows)
+    grid = ((rows + pad) // bm,)
+    out = pl.pallas_call(
+        functools.partial(_sparse_scatter_kernel, k=k, idx_bits=idx_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, packed.shape[-1]), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
+        interpret=interpret,
+    )(values, packed)
+    return out[:rows] if pad else out
+
+
+def sparse_scatter_axpy_2d(values: jax.Array, packed: jax.Array, acc: jax.Array,
+                           *, weight, acc_weight=1.0,
+                           interpret: bool = False) -> jax.Array:
+    """Fused unpack + scatter + accumulate:
+    ``acc_weight * acc + weight * scatter(values -> indices)``.
+
+    The sparse receive side of a gossip round: the reconstructed dense fp32
+    neighbor delta never exists in HBM.  Both weights ride the same (2,)
+    scalar operand as the quantized axpy kernel, so ECD's traced
+    ``(1-2/s, 2/s)`` blend drives this kernel too.
+    """
+    rows, k = values.shape
+    cols = acc.shape[-1]
+    assert acc.shape == (rows, cols), (acc.shape, (rows, cols))
+    idx_bits = idx_bits_for(cols)
+    bm = _pick_block_rows(rows, cols)
+    (values, packed, acc), pad = _pad_rows([values, packed, acc], bm, rows)
+    grid = ((rows + pad) // bm,)
+    weights = jnp.stack([jnp.asarray(acc_weight, jnp.float32).reshape(()),
+                         jnp.asarray(weight, jnp.float32).reshape(())])
+    out = pl.pallas_call(
+        functools.partial(_sparse_scatter_axpy_kernel, k=k, idx_bits=idx_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, packed.shape[-1]), lambda i: (i, 0)),
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
+        interpret=interpret,
+    )(weights, values, packed, acc.astype(jnp.float32))
     return out[:rows] if pad else out

@@ -7,6 +7,16 @@ stream layout documented in kernels/quant.py (wire format v2: any width 2..7,
 codes straddle uint32 word boundaries); they are the *shared* reference codec:
 the distributed WireCodec and the compression operators call these, and the
 Pallas kernels are tested word-for-word against them.
+
+The same stream layout carries the *sparse* wire format: ``pack_uint`` /
+``unpack_uint`` pack raw unsigned fields of any width 1..16 (no sign bias),
+which the sparse codec uses for its block-local indices
+(``idx_bits_for(block)`` bits each), and ``sparse_select_2d_ref`` /
+``sparse_scatter_2d_ref`` are the selection/scatter oracles the fused Pallas
+kernels and the SparseWireCodec are tested word-for-word against.  The
+selection order is canonical — descending key, ties broken toward the smaller
+index — so all three implementations emit identical ``{values, indices}``
+payloads for identical seeds.
 """
 from __future__ import annotations
 
@@ -15,7 +25,10 @@ import jax.numpy as jnp
 
 from repro.kernels.quant import (  # noqa: F401  (shared single source of truth)
     PACKABLE_BITS,
+    SPARSE_MODES,
+    idx_bits_for,
     pcg_hash,
+    sparse_geometry,
     stream_geometry,
     uniform_from_hash,
 )
@@ -51,24 +64,25 @@ def aligned_block(limit: int, n: int, *, bits: int) -> int:
     return min(limit, -(-block // cpg) * cpg)
 
 
-def pack_codes(codes: jax.Array, *, bits: int) -> jax.Array:
-    """Bit-pack int8 codes in [-levels, levels] along the last dim.
+def pack_uint(u: jax.Array, *, bits: int) -> jax.Array:
+    """Bit-pack raw unsigned ``bits``-wide fields along the last dim.
 
-    (..., cols) int8 -> (..., cols*bits/32) uint32, the stream layout of
-    kernels/quant.py: codes are biased to [1, 2^bits - 1], grouped into
-    ``cpg = lcm(bits,32)/bits``-code groups laid out plane-major across the
-    ``G = cols/cpg`` groups, and each group's ``cpg * bits``-bit stream fills
-    ``wpg = lcm(bits,32)/32`` words exactly (codes straddle word boundaries
-    when 32 % bits != 0).  ``cols`` must be a multiple of ``cpg``.
+    (..., cols) uint32 (each value < 2^bits) -> (..., cols*bits/32) uint32, the
+    stream layout of kernels/quant.py with no sign bias: fields are grouped
+    into ``cpg = lcm(bits,32)/bits``-field groups laid out plane-major across
+    the ``G = cols/cpg`` groups, and each group's ``cpg * bits``-bit stream
+    fills ``wpg = lcm(bits,32)/32`` words exactly (fields straddle word
+    boundaries when 32 % bits != 0).  ``cols`` must be a multiple of ``cpg``.
+    Any width 1..16 packs — the quantizer restricts itself to 2..7, the sparse
+    index stream uses ``idx_bits_for(block)``.
     """
-    assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
+    assert 1 <= bits <= 16, f"uint stream widths are 1..16, got {bits}"
     cpg, wpg = stream_geometry(bits)
-    levels = 2 ** (bits - 1) - 1
-    cols = codes.shape[-1]
+    cols = u.shape[-1]
     assert cols % cpg == 0, f"last dim {cols} not a multiple of {cpg}"
     g = cols // cpg
-    u = (codes.astype(jnp.int32) + (levels + 1)).astype(jnp.uint32)
-    words = [jnp.zeros(codes.shape[:-1] + (g,), jnp.uint32) for _ in range(wpg)]
+    u = u.astype(jnp.uint32)
+    words = [jnp.zeros(u.shape[:-1] + (g,), jnp.uint32) for _ in range(wpg)]
     for j in range(cpg):
         w, off = divmod(j * bits, 32)
         uj = u[..., j * g:(j + 1) * g]
@@ -78,11 +92,10 @@ def pack_codes(codes: jax.Array, *, bits: int) -> jax.Array:
     return jnp.concatenate(words, axis=-1)
 
 
-def unpack_codes(packed: jax.Array, *, bits: int) -> jax.Array:
-    """Inverse of :func:`pack_codes`: (..., W) uint32 -> (..., W*32/bits) int8."""
-    assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
+def unpack_uint(packed: jax.Array, *, bits: int) -> jax.Array:
+    """Inverse of :func:`pack_uint`: (..., W) uint32 -> (..., W*32/bits) uint32."""
+    assert 1 <= bits <= 16, f"uint stream widths are 1..16, got {bits}"
     cpg, wpg = stream_geometry(bits)
-    levels = 2 ** (bits - 1) - 1
     mask = jnp.uint32((1 << bits) - 1)
     W = packed.shape[-1]
     assert W % wpg == 0, f"word count {W} not a multiple of {wpg}"
@@ -94,8 +107,29 @@ def unpack_codes(packed: jax.Array, *, bits: int) -> jax.Array:
         v = planes[w] >> jnp.uint32(off)
         if off + bits > 32:
             v = v | (planes[w + 1] << jnp.uint32(32 - off))
-        parts.append(((v & mask).astype(jnp.int32) - (levels + 1)))
-    return jnp.concatenate(parts, axis=-1).astype(jnp.int8)
+        parts.append(v & mask)
+    return jnp.concatenate(parts, axis=-1)
+
+
+def pack_codes(codes: jax.Array, *, bits: int) -> jax.Array:
+    """Bit-pack int8 codes in [-levels, levels] along the last dim.
+
+    (..., cols) int8 -> (..., cols*bits/32) uint32: the codes are biased to
+    the unsigned range [1, 2^bits - 1] and shipped through :func:`pack_uint`
+    (the single stream layout shared with the sparse index codec).
+    """
+    assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
+    levels = 2 ** (bits - 1) - 1
+    return pack_uint((codes.astype(jnp.int32) + (levels + 1)).astype(jnp.uint32),
+                     bits=bits)
+
+
+def unpack_codes(packed: jax.Array, *, bits: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`: (..., W) uint32 -> (..., W*32/bits) int8."""
+    assert bits in PACKABLE_BITS, f"packable bits are {PACKABLE_BITS}, got {bits}"
+    levels = 2 ** (bits - 1) - 1
+    u = unpack_uint(packed, bits=bits)
+    return (u.astype(jnp.int32) - (levels + 1)).astype(jnp.int8)
 
 
 def quantize_2d_ref(x: jax.Array, seed: jax.Array, *, bits: int):
@@ -139,3 +173,96 @@ def unpack_dequant_axpy_2d_ref(packed: jax.Array, scale: jax.Array, acc: jax.Arr
                                acc_weight: float = 1.0) -> jax.Array:
     return acc_weight * acc.astype(jnp.float32) \
         + weight * unpack_dequant_2d_ref(packed, scale, bits=bits)
+
+
+# ------------------------------------------------------------ sparse codec
+
+
+def sparse_order_2d_ref(x: jax.Array, seed: jax.Array, *, mode: str) -> jax.Array:
+    """Canonical selection order of a (rows, cols) block view: every column
+    index, sorted by descending selection key with ties broken toward the
+    smaller index.  ``randk`` keys are the counter-based PCG hash of the
+    global element index (the hash is a bijection on uint32, so keys within a
+    row are distinct and the order is a uniform pseudo-random permutation);
+    ``topk`` keys are |x| (stable sort => smallest index wins ties — the same
+    tie-break as the kernel's iterative first-occurrence argmax)."""
+    assert mode in SPARSE_MODES, f"sparse modes are {SPARSE_MODES}, got {mode}"
+    rows, cols = x.shape
+    if mode == "randk":
+        idx = (
+            jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0) * jnp.uint32(cols)
+            + jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+        )
+        key = pcg_hash(idx ^ jnp.asarray(seed).reshape(()).astype(jnp.uint32))
+        return jnp.argsort(key ^ jnp.uint32(0xFFFFFFFF), axis=1, stable=True)
+    return jnp.argsort(-jnp.abs(x.astype(jnp.float32)), axis=1, stable=True)
+
+
+def sparse_select_2d_ref(x: jax.Array, seed: jax.Array, *, k: int, mode: str,
+                         value_dtype=jnp.float32):
+    """Fixed-capacity selection oracle: (rows, cols) -> (values (rows, k),
+    indices (rows, k) uint32), in canonical selection order.  ``randk``
+    rescales kept values by ``cols/k`` (inclusion probability is exactly
+    ``k/cols`` for a uniform k-subset => unbiased); ``topk`` keeps raw values.
+    """
+    rows, cols = x.shape
+    x = x.astype(jnp.float32)
+    sel = sparse_order_2d_ref(x, seed, mode=mode)[:, :k]
+    vals = jnp.take_along_axis(x, sel, axis=1)
+    if mode == "randk":
+        vals = vals * jnp.float32(cols / k)
+    return vals.astype(value_dtype), sel.astype(jnp.uint32)
+
+
+def sparse_pack_idx(indices: jax.Array, *, block: int, kpad: int) -> jax.Array:
+    """(..., k) uint32 block-local indices -> (..., words) uint32 packed
+    stream: zero-pad the tail to ``kpad`` whole groups, then :func:`pack_uint`
+    at ``idx_bits_for(block)`` bits per field.  The zero tail is container
+    padding, not payload — unpack slices it back off with ``[..., :k]``."""
+    k = indices.shape[-1]
+    pad = kpad - k
+    if pad:
+        indices = jnp.pad(indices, [(0, 0)] * (indices.ndim - 1) + [(0, pad)])
+    return pack_uint(indices.astype(jnp.uint32), bits=idx_bits_for(block))
+
+
+def sparse_unpack_idx(packed: jax.Array, *, block: int, k: int) -> jax.Array:
+    """Inverse of :func:`sparse_pack_idx`: (..., words) -> (..., k) uint32."""
+    return unpack_uint(packed, bits=idx_bits_for(block))[..., :k]
+
+
+def sparse_select_pack_2d_ref(x: jax.Array, seed: jax.Array, *, p: float,
+                              mode: str, value_dtype=jnp.float32):
+    """Oracle for the fused select+gather+pack kernel: select, then pack the
+    index stream.  Returns (values (rows, k), packed indices (rows, words))."""
+    cols = x.shape[1]
+    k, _, kpad, _ = sparse_geometry(cols, p)
+    vals, sel = sparse_select_2d_ref(x, seed, k=k, mode=mode,
+                                     value_dtype=value_dtype)
+    return vals, sparse_pack_idx(sel, block=cols, kpad=kpad)
+
+
+def sparse_scatter_2d_ref(values: jax.Array, indices: jax.Array, *,
+                          cols: int) -> jax.Array:
+    """(rows, k) values + (rows, k) duplicate-free block-local indices ->
+    dense (rows, cols) f32.  Each output lane receives at most one value, so
+    the sum order is irrelevant and the result is bit-exact across the jnp,
+    codec, and kernel formulations."""
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, (values.shape[0], 1, cols), 2)
+    hit = indices[..., :, None].astype(jnp.uint32) == lanes
+    return jnp.sum(jnp.where(hit, values[..., :, None].astype(jnp.float32), 0.0),
+                   axis=-2)
+
+
+def sparse_unpack_scatter_2d_ref(values: jax.Array, packed: jax.Array, *,
+                                 k: int, cols: int) -> jax.Array:
+    return sparse_scatter_2d_ref(
+        values, sparse_unpack_idx(packed, block=cols, k=k), cols=cols)
+
+
+def sparse_scatter_axpy_2d_ref(values: jax.Array, packed: jax.Array,
+                               acc: jax.Array, *, k: int, weight: float,
+                               acc_weight: float = 1.0) -> jax.Array:
+    cols = acc.shape[-1]
+    return acc_weight * acc.astype(jnp.float32) \
+        + weight * sparse_unpack_scatter_2d_ref(values, packed, k=k, cols=cols)

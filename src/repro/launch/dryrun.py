@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed.decentralized import (
+    SparseWireCodec,
     WireCodec,
     init_dist_state,
     make_dist_train_step,
@@ -77,9 +78,16 @@ def _state_shardings(state_sds, mesh, n_routed):
     )
 
 
+def _make_codec(codec_kind: str, bits: int, p: float, sparse_mode: str):
+    if codec_kind == "sparse":
+        return SparseWireCodec(p=p, mode=sparse_mode)
+    return WireCodec(bits=bits)
+
+
 def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dcd",
                  bits: int = 8, momentum: float = 0.0,
-                 topology: str = "ring") -> Dict[str, Any]:
+                 topology: str = "ring", codec_kind: str = "quant",
+                 p: float = 0.25, sparse_mode: str = "randk") -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     plan = TRAIN_PLANS[arch]
@@ -90,7 +98,8 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
 
     model = build_model(cfg)
     opt = sgd(momentum=momentum)
-    codec = WireCodec(bits=bits) if algo in ("naive", "dcd", "ecd") else None
+    codec = _make_codec(codec_kind, bits, p, sparse_mode) \
+        if algo in ("naive", "dcd", "ecd") else None
     loss_fn = lambda p, b: model.loss(p, b, remat=plan.remat)
     # mesh is multi-axis (node, fsdp, model): the step falls back from the
     # shard_map-fused decode to the sharding-preserving reference codec (see
@@ -129,7 +138,9 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
         pod_size=256 if multi_pod else None)
     mem = compiled.memory_analysis()
     # wire accounting from the real payload containers (not a formula): the
-    # bytes one gossip direction actually puts on the node-axis permute
+    # bytes one gossip direction actually puts on the node-axis permute.
+    # Every codec measures — the sparse value+index format included, so no
+    # record needs a "modeled" disclaimer anymore.
     wire = {}
     if codec is not None:
         payload_bytes = codec.payload_nbytes(state_sds.params)
@@ -137,14 +148,17 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
         wire = {
             "wire_payload_bytes": payload_bytes,
             "wire_bits_per_element": round(8.0 * payload_bytes / stacked_elems, 4),
-            # measured from real payload container nbytes (vs. a *modeled*
-            # figure like RandomSparsifier's value+index codec — see netsim)
-            "wire_measured": not getattr(codec, "wire_is_modeled", False),
-            "wire_format": "packed-stream-u32" if codec.packed else "int8",
+            "wire_format": codec.wire_format,
         }
+    # codec params: bits describes the quantized codec only; sparse records
+    # carry (p, sparse_mode) instead so sweep tooling can attribute rows
+    codec_params = {"bits": bits} if codec_kind == "quant" else \
+        {"p": p, "sparse_mode": sparse_mode}
     rec = {
-        "arch": arch, "shape": shape_name, "kind": "train", "algo": algo, "bits": bits,
-        "topology": topology, "multi_pod": multi_pod, "n_nodes": n, "n_chips": n_chips,
+        "arch": arch, "shape": shape_name, "kind": "train", "algo": algo,
+        "codec": codec_kind, **codec_params,
+        "topology": topology, "multi_pod": multi_pod,
+        "n_nodes": n, "n_chips": n_chips,
         "params_total": n_total, **wire,
         "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
         "memory": {
@@ -228,11 +242,13 @@ def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool) -> Dict[str, An
 
 
 def dryrun(arch: str, shape_name: str, *, multi_pod: bool = False, algo: str = "dcd",
-           bits: int = 8, topology: str = "ring") -> Dict[str, Any]:
+           bits: int = 8, topology: str = "ring", codec_kind: str = "quant",
+           p: float = 0.25, sparse_mode: str = "randk") -> Dict[str, Any]:
     shape = SHAPES[shape_name]
     if shape.kind == "train":
         return dryrun_train(arch, shape_name, multi_pod=multi_pod, algo=algo,
-                            bits=bits, topology=topology)
+                            bits=bits, topology=topology, codec_kind=codec_kind,
+                            p=p, sparse_mode=sparse_mode)
     return dryrun_serve(arch, shape_name, multi_pod=multi_pod)
 
 
@@ -244,6 +260,11 @@ def main():
     ap.add_argument("--algo", default="dcd",
                     choices=["cpsgd", "dpsgd", "naive", "dcd", "ecd"])
     ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--codec", default="quant", choices=["quant", "sparse"],
+                    help="gossip wire codec: quantized codes or sparse value+index")
+    ap.add_argument("--p", type=float, default=0.25,
+                    help="sparse codec keep fraction (k = ceil(p * block))")
+    ap.add_argument("--sparse-mode", default="randk", choices=["randk", "topk"])
     ap.add_argument("--topology", default="ring", choices=["ring", "torus"])
     ap.add_argument("--json", default=None, help="append JSONL records here")
     args = ap.parse_args()
@@ -257,7 +278,8 @@ def main():
             try:
                 rec = dryrun(arch, shape, multi_pod=args.multi_pod,
                              algo=args.algo, bits=args.bits,
-                             topology=args.topology)
+                             topology=args.topology, codec_kind=args.codec,
+                             p=args.p, sparse_mode=args.sparse_mode)
                 print(f"[OK] {key}: bottleneck={rec['bottleneck']} "
                       f"t=({rec['t_compute_s']:.2e},{rec['t_memory_s']:.2e},"
                       f"{rec['t_collective_s']:.2e})s "

@@ -22,6 +22,7 @@ from repro.configs.base import ArchConfig
 from repro.data import DataConfig, stacked_node_batches
 from repro.distributed.decentralized import (
     DistState,
+    SparseWireCodec,
     WireCodec,
     init_dist_state,
     make_dist_train_step,
@@ -35,7 +36,10 @@ from repro.optim.schedules import linear_warmup_cosine
 class TrainConfig:
     arch: Optional[str] = None          # assigned arch id, or None for custom cfg
     algo: str = "dcd"                   # cpsgd | dpsgd | naive | dcd | ecd
-    bits: int = 8
+    codec: str = "quant"                # quant | sparse (gossip wire format)
+    bits: int = 8                       # quantized codec width
+    p: float = 0.25                     # sparse codec keep fraction
+    sparse_mode: str = "randk"          # randk | topk
     n_nodes: int = 8
     seq_len: int = 256
     global_batch: int = 32
@@ -53,7 +57,10 @@ class TrainConfig:
 def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
     model = build_model(cfg)
     opt = make_optimizer(tc.optimizer, **({"weight_decay": 0.01} if tc.optimizer == "adamw" else {}))
-    codec = WireCodec(bits=tc.bits) if tc.algo in ("naive", "dcd", "ecd") else None
+    codec = None
+    if tc.algo in ("naive", "dcd", "ecd"):
+        codec = SparseWireCodec(p=tc.p, mode=tc.sparse_mode) \
+            if tc.codec == "sparse" else WireCodec(bits=tc.bits)
     sched = linear_warmup_cosine(tc.lr, tc.warmup, tc.steps)
     loss_fn = lambda p, b: model.loss(p, b)
     step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, codec, tc.n_nodes, sched))

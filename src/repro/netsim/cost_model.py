@@ -13,8 +13,10 @@ way the paper's systems discussion does:
 * Compressed decentralized (DCD/ECD): same round structure, payload shrunk by
   the wire ratio — which is taken from the *real* payload containers, not a
   formula: int8 codes + per-block scales ~ 8.03/32 at 8 bits, bit-packed uint32
-  words ~ 4.03/32 at 4 bits (see ``strategies_for``, which asks the compressor
-  for its measured wire bits/element).
+  words ~ 4.03/32 at 4 bits, and fp32/fp16 values + bit-packed indices for the
+  sparsifiers (see ``strategies_for``, which asks the compressor for its
+  measured wire bits/element).  Every registry compressor measures its figure
+  from payload nbytes — there is no modeled wire format left to flag.
 
 comm_time = latency * rounds + bytes / bandwidth ;  iter_time = compute + comm.
 """
@@ -39,33 +41,29 @@ class CommStrategy:
     name: str
     bytes_per_iter: float     # through each node's NIC
     latency_rounds: int       # sequential latency-bound rounds
-    wire_modeled: bool = False  # True: wire bits are an idealized model, not
-    #                             measured payload nbytes (RandomSparsifier)
 
 
-def strategies(model_bytes: float, n: int, wire_bits: float = 8.03,
-               wire_modeled: bool = False) -> Dict[str, CommStrategy]:
+def strategies(model_bytes: float, n: int,
+               wire_bits: float = 8.03) -> Dict[str, CommStrategy]:
     M = model_bytes
     return {
         "allreduce": CommStrategy("allreduce", 2 * (n - 1) / n * M, 2 * (n - 1)),
         "decentralized_fp": CommStrategy("decentralized_fp", 2 * M, 2),
-        "decentralized_lp": CommStrategy("decentralized_lp", 2 * M * wire_bits / 32, 2,
-                                         wire_modeled),
+        "decentralized_lp": CommStrategy("decentralized_lp", 2 * M * wire_bits / 32, 2),
         # naive centralized quantized (for completeness; paper omits it)
         "allreduce_lp": CommStrategy("allreduce_lp", 2 * (n - 1) / n * M * wire_bits / 32,
-                                     2 * (n - 1), wire_modeled),
+                                     2 * (n - 1)),
     }
 
 
 def strategies_for(model_bytes: float, n: int, compressor) -> Dict[str, CommStrategy]:
     """Strategies whose low-precision wire bits come from the compressor's
-    actual payload containers (``wire_bits_per_element`` is payload-derived for
-    the quantizer: bit-stream-packed uint32 words at 2..7 bits, int8 at 8).
-    Compressors whose figure is an idealized model rather than measured
-    container bytes (RandomSparsifier) mark their strategies ``wire_modeled``."""
+    actual payload containers: ``wire_bits_per_element`` is payload-derived
+    for every registry compressor — bit-stream-packed uint32 words at 2..7
+    bits, int8 at 8, and fp32/fp16 values + packed uint index words for the
+    fixed-capacity sparsifiers."""
     return strategies(model_bytes, n,
-                      wire_bits=float(compressor.wire_bits_per_element()),
-                      wire_modeled=bool(getattr(compressor, "wire_is_modeled", False)))
+                      wire_bits=float(compressor.wire_bits_per_element()))
 
 
 def comm_time(s: CommStrategy, net: NetworkCondition) -> float:

@@ -1,0 +1,69 @@
+"""Probe: does ``shard_map(auto=...)`` work for the fused gossip decode on
+multi-axis meshes on this jax/XLA pin?  (ROADMAP item; see
+``_make_decode_axpy`` in repro/distributed/decentralized.py — on the current
+pin the auto escape hatch for the non-node axes check-fails inside XLA's SPMD
+partitioner, so multi-axis meshes fall back to the jnp reference codec.)
+
+The failure is a hard ``CHECK`` abort inside XLA (SIGABRT, not a Python
+exception), so the attempt runs in a subprocess and the parent interprets the
+exit code.  Not collected by pytest (no ``test_`` prefix) — run standalone by
+the non-blocking ``jax-nightly`` CI job:
+
+    PYTHONPATH=src python tests/probe_shard_map_auto.py
+
+Exit 0: the auto path lowers, compiles, and matches the reference decode —
+time to route the multi-axis dryrun meshes through the fused kernel.
+Exit 1: still check-fails/aborts (the pinned toolchain's status quo).
+"""
+import os
+import subprocess
+import sys
+
+INNER = """
+import os
+os.environ["REPRO_SHARD_MAP_AUTO"] = "1"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8 " + \\
+    os.environ.get("XLA_FLAGS", "")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.decentralized import WireCodec, _make_decode_axpy
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("node", "fsdp", "model"))
+codec = WireCodec(bits=4, block=128)
+dec = _make_decode_axpy(codec, mesh)
+assert dec is not None, "REPRO_SHARD_MAP_AUTO was not honored"
+tree = {"w": jax.random.normal(jax.random.key(0), (2, 8, 512))}
+tdef, payloads = codec.encode(tree, jnp.asarray(0, jnp.int32), salt=1)
+acc = jax.tree.map(jnp.zeros_like, tree)
+with mesh:
+    out = jax.jit(lambda pls, a: dec(tdef, pls, a, 1.0))(payloads, acc)
+    out = jax.tree.map(np.asarray, out)
+ref = codec.decode(tdef, payloads, tree)
+np.testing.assert_allclose(out["w"], np.asarray(ref["w"]), atol=1e-5)
+print("AUTO_DECODE_OK", jax.__version__)
+"""
+
+
+def main() -> int:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", INNER], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if res.returncode == 0 and "AUTO_DECODE_OK" in res.stdout:
+        print(res.stdout.strip())
+        print("shard_map(auto=...) decode WORKS — route the multi-axis dryrun "
+              "meshes through the fused kernel (ROADMAP).")
+        return 0
+    print(f"shard_map(auto=...) decode still FAILS (exit {res.returncode}):")
+    tail = (res.stderr or res.stdout).strip().splitlines()[-8:]
+    print("\n".join("  " + line for line in tail))
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

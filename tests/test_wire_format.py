@@ -1,11 +1,15 @@
-"""Wire format v2 property tests: bit-exact stream packing for widths 2..7.
+"""Wire format v2 property tests: bit-exact stream packing for widths 2..7,
+plus the sparse value+index wire format.
 
 Three implementations must agree **word for word** on identical seeds — the
 Pallas kernels (interpret mode), the pure-jnp reference codec in
-kernels/ref.py, and the sharding-preserving WireCodec in
+kernels/ref.py, and the sharding-preserving WireCodec/SparseWireCodec in
 distributed/decentralized.py.  Plus roundtrip/extreme-value/ragged-tail
 properties for every width the quantizer supports (2..8; 8 rides the int8
-container, so its "pack" case is the identity on container bytes).
+container, so its "pack" case is the identity on container bytes), and
+roundtrip/ragged-tail/duplicate-free-index properties for the sparse codec
+(fixed-capacity top-k / random-k, indices packed to ceil(log2(block)) bits
+via the same stream layout).
 """
 import jax
 import jax.numpy as jnp
@@ -13,11 +17,27 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.distributed.decentralized import WireCodec
+from repro.distributed.decentralized import SparseWireCodec, WireCodec
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.kernels.quant import PACKABLE_BITS, quantize_2d, quantize_pack_2d
-from repro.kernels.ref import aligned_block, pack_codes, stream_geometry, unpack_codes
+from repro.kernels.quant import (
+    PACKABLE_BITS,
+    SPARSE_MODES,
+    quantize_2d,
+    quantize_pack_2d,
+    sparse_geometry,
+    sparse_scatter_axpy_2d,
+    sparse_select_pack_2d,
+)
+from repro.kernels.ref import (
+    aligned_block,
+    idx_bits_for,
+    pack_codes,
+    pack_uint,
+    stream_geometry,
+    unpack_codes,
+    unpack_uint,
+)
 
 
 def test_stream_geometry_word_counts():
@@ -216,3 +236,226 @@ def test_aligned_block_rounds_to_groups():
             assert b % cpg == 0 and 0 < b <= 1024
             if n <= 1024:     # one whole-group-padded block covers the leaf
                 assert b >= n
+
+
+# ------------------------------------------------------------ sparse format
+
+@pytest.mark.parametrize("bits", [1, 3, 7, 8, 10, 11, 13, 16])
+def test_pack_uint_roundtrip_any_width(bits):
+    """Raw unsigned stream packing roundtrips for every width 1..16 — beyond
+    the quantizer's 2..7 — which is what carries the sparse index stream
+    (7 bits @ block 128, 10 bits @ block 1024)."""
+    cpg, wpg = stream_geometry(bits)
+    assert cpg * bits == wpg * 32
+    rng = np.random.default_rng(bits)
+    u = jnp.asarray(rng.integers(0, 1 << bits, (5, 3 * cpg)), jnp.uint32)
+    packed = pack_uint(u, bits=bits)
+    assert packed.dtype == jnp.uint32 and packed.shape == (5, 3 * wpg)
+    np.testing.assert_array_equal(np.asarray(unpack_uint(packed, bits=bits)),
+                                  np.asarray(u))
+
+
+def test_sparse_geometry_properties():
+    for block in (128, 256, 1024):
+        w = idx_bits_for(block)
+        assert 2 ** w >= block > 2 ** (w - 1)
+        for p in (0.05, 0.1, 0.25, 0.5, 1.0):
+            k, w2, kpad, words = sparse_geometry(block, p)
+            assert w2 == w and k == min(block, max(1, int(np.ceil(p * block))))
+            cpg, _ = stream_geometry(w)
+            assert kpad % cpg == 0 and kpad >= k
+            assert words * 32 == kpad * w          # whole words, exactly
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    mode=st.sampled_from(SPARSE_MODES),
+    rows=st.integers(1, 24),
+    p=st.sampled_from([0.05, 0.1, 0.25, 0.5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_roundtrip_duplicate_free_property(mode, rows, p, seed):
+    """Property: indices are duplicate-free per block, the packed stream
+    roundtrips exactly, and scatter rebuilds exactly the selected values
+    (randk: x * block/k at the k selected lanes, zero elsewhere)."""
+    cols = 128
+    k, w, kpad, words = sparse_geometry(cols, p)
+    x = jax.random.normal(jax.random.key(seed), (rows, cols)) * 2
+    s = jnp.asarray([seed], jnp.uint32)
+    vals, packed = kref.sparse_select_pack_2d_ref(x, s, p=p, mode=mode)
+    assert vals.shape == (rows, k) and packed.shape == (rows, words)
+    idx = np.asarray(kref.sparse_unpack_idx(packed, block=cols, k=k))
+    for r in range(rows):
+        assert len(set(idx[r])) == k               # duplicate-free
+    # packed stream roundtrips the raw index fields exactly
+    dense = np.asarray(kref.sparse_unpack_scatter_2d_ref(vals, packed, k=k,
+                                                         cols=cols))
+    xs = np.asarray(x)
+    scale = cols / k if mode == "randk" else 1.0
+    for r in range(rows):
+        np.testing.assert_array_equal(dense[r][idx[r]],
+                                      np.float32(scale) * xs[r][idx[r]]
+                                      if mode == "randk" else xs[r][idx[r]])
+        off = np.setdiff1d(np.arange(cols), idx[r])
+        assert not dense[r][off].any()
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    mode=st.sampled_from(SPARSE_MODES),
+    rows=st.sampled_from([1, 9, 48]),             # fixed set: padded-shape reuse
+    p=st.sampled_from([0.1, 0.25]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_kernel_vs_ref_words_property(mode, rows, p, seed):
+    """Pallas fused select+gather+pack == jnp oracle, word-for-word on the
+    packed index stream and value-for-value, odd row counts included."""
+    x = jax.random.normal(jax.random.key(seed), (rows, 128)) * 10
+    s = jnp.asarray([seed], dtype=jnp.uint32)
+    vk, ik = sparse_select_pack_2d(x, s, p=p, mode=mode, interpret=True)
+    vr, ir = kref.sparse_select_pack_2d_ref(x, s, p=p, mode=mode)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+
+
+@pytest.mark.parametrize("mode", SPARSE_MODES)
+def test_sparse_scatter_axpy_kernel_vs_ref(mode):
+    """The fused unpack+scatter+axpy kernel matches the reference to float
+    rounding (the kernel's mul-add chain may fuse to FMA, so this is a
+    tolerance check — the payload itself is asserted bit-exact above)."""
+    p = 0.25
+    k, _, _, _ = sparse_geometry(128, p)
+    x = jax.random.normal(jax.random.key(0), (9, 128)) * 3
+    acc = jax.random.normal(jax.random.key(1), (9, 128))
+    s = jnp.asarray([7], jnp.uint32)
+    vals, packed = kref.sparse_select_pack_2d_ref(x, s, p=p, mode=mode)
+    out_k = sparse_scatter_axpy_2d(vals, packed, acc, weight=1.0 / 3,
+                                   acc_weight=0.875, interpret=True)
+    out_r = kref.sparse_scatter_axpy_2d_ref(vals, packed, acc, k=k,
+                                            weight=1.0 / 3, acc_weight=0.875)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", SPARSE_MODES)
+def test_sparse_ops_roundtrip_ragged_tails(mode):
+    """Any-shape payloads roundtrip through the ops wrappers: ragged tails,
+    scalars, odd primes — padding never leaks into the reconstruction."""
+    for shape in [(1,), (97,), (1023,), (5, 7, 11)]:
+        x = jax.random.normal(jax.random.key(3), shape) * 3
+        payload = kops.sparse_compress(jax.random.key(1), x, p=0.25,
+                                       block_size=128, mode=mode)
+        assert payload["idx"].dtype == jnp.uint32
+        out = kops.sparse_decompress(payload, block_size=128, shape=shape)
+        assert out.shape == shape
+        # reconstruction only ever contains rescaled originals or zeros
+        scale = 128 / 32 if mode == "randk" else 1.0
+        flat_x, flat_o = np.asarray(x).ravel(), np.asarray(out).ravel()
+        nz = np.nonzero(flat_o)[0]
+        np.testing.assert_allclose(flat_o[nz], scale * flat_x[nz], rtol=1e-6)
+
+
+def test_sparse_topk_kernel_nan_safe():
+    """A NaN in the block must not poison the topk selection: the kernel ranks
+    NaN below every real magnitude (the oracle's total-order sort puts NaN
+    last), so the payload stays word-for-word equal to the oracle and the
+    duplicate-free index invariant holds."""
+    x = jax.random.normal(jax.random.key(2), (3, 128)) * 2
+    x = x.at[0, 5].set(jnp.nan).at[2, 0].set(jnp.nan)
+    s = jnp.asarray([11], jnp.uint32)
+    vk, ik = sparse_select_pack_2d(x, s, p=0.25, mode="topk", interpret=True)
+    vr, ir = kref.sparse_select_pack_2d_ref(x, s, p=0.25, mode="topk")
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+    k, _, _, _ = sparse_geometry(128, 0.25)
+    idx = np.asarray(kref.sparse_unpack_idx(ik, block=128, k=k))
+    for r in range(3):
+        assert len(set(idx[r])) == k               # still duplicate-free
+    assert not np.isnan(np.asarray(vk)).any()      # k=32 << 127 non-NaN mags
+
+
+def test_sparse_three_way_word_equality():
+    """Kernel path, jnp reference, and SparseWireCodec produce the SAME
+    packed index words and values for the same seed and block geometry (the
+    sparse wire format is one format)."""
+    block = 128
+    rows, cols = 6, block
+    x = jax.random.normal(jax.random.key(77), (rows, cols)) * 1.5
+    seed = jnp.asarray([4242], dtype=jnp.uint32)
+
+    for mode in SPARSE_MODES:
+        vk, ik = sparse_select_pack_2d(x, seed, p=0.25, mode=mode,
+                                       interpret=True)               # Pallas
+        vr, ir = kref.sparse_select_pack_2d_ref(x, seed, p=0.25, mode=mode)
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+
+        # SparseWireCodec on the same 2-D leaf with block == cols and the same
+        # seed: the blocked (rows, 1, block) counter matches the kernel's
+        # row-major counter exactly (nblk == 1)
+        from repro.distributed.decentralized import _sparsify_nd
+
+        vn, in_ = _sparsify_nd(x, seed.reshape(()), p=0.25, block=block,
+                               mode=mode)
+        np.testing.assert_array_equal(np.asarray(in_.reshape(rows, -1)),
+                                      np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(vn.reshape(rows, -1)),
+                                      np.asarray(vr))
+    assert SparseWireCodec(p=0.25, block=block).packed
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    mode=st.sampled_from(SPARSE_MODES),
+    rows=st.integers(1, 16),
+    last=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_codec_words_equal_ref_property(mode, rows, last, seed):
+    """SparseWireCodec's payload == the INDEPENDENT kernels/ref.py 2-D oracle
+    on the padded blocked view, ragged last dims and multi-block leaves
+    included: the codec's flat (row, block-index, lane) counter equals the
+    oracle's row-major counter on the (rows * nblk, block) reshape, so this
+    pins the nd encode path against the oracle — not against itself."""
+    codec = SparseWireCodec(p=0.25, block=128, mode=mode)
+    leaf = jax.random.normal(jax.random.key(seed), (rows, last)) * 2
+    tree = {"w": leaf}
+    step = jnp.asarray(seed % 1000, jnp.int32)
+    tdef, payloads = codec.encode(tree, step, salt=1)
+
+    leaf_seed = (step.astype(jnp.uint32) * jnp.uint32(2654435761)
+                 ^ jnp.uint32(1 * 97 + 0))
+    block = min(128, max(last, 1))
+    pad = (-last) % block
+    nblk = (last + pad) // block
+    blocks = jnp.pad(leaf, ((0, 0), (0, pad))).reshape(rows * nblk, block)
+    vals_r, idx_r = kref.sparse_select_pack_2d_ref(blocks, leaf_seed, p=0.25,
+                                                   mode=mode)
+    k = vals_r.shape[-1]
+    np.testing.assert_array_equal(
+        np.asarray(payloads[0]["idx"]).reshape(rows * nblk, -1),
+        np.asarray(idx_r))
+    np.testing.assert_array_equal(
+        np.asarray(payloads[0]["values"]).reshape(rows * nblk, -1),
+        np.asarray(vals_r))
+    # decode == the oracle's scatter of the same payload, re-assembled
+    dense_r = np.asarray(kref.sparse_unpack_scatter_2d_ref(
+        vals_r, idx_r, k=k, cols=block)).reshape(rows, nblk * block)[:, :last]
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(tdef, payloads, tree)["w"]), dense_r)
+
+
+def test_sparse_wire_bits_measured():
+    """Acceptance: the sparse payload's measured wire bits match the codec's
+    static figure — k fp32 values + packed idx words, no modeled number."""
+    codec = SparseWireCodec(p=0.25, block=128)
+    tree = {"w": jnp.zeros((8, 64, 4096)), "b": jnp.zeros((8, 2048))}
+    n_elem = sum(l.size for l in jax.tree.leaves(tree))
+    tdef, payload = codec.encode(tree, jnp.asarray(0, jnp.int32), salt=0)
+    measured = 8.0 * sum(p["values"].nbytes + p["idx"].nbytes for p in payload) / n_elem
+    assert measured == pytest.approx(9.75)         # (32*4 + 7*4) * 8 / 128
+    assert codec.payload_nbytes(tree) == \
+        sum(p["values"].nbytes + p["idx"].nbytes for p in payload)
+    assert codec.wire_bits_per_element() == pytest.approx(9.75)
+    assert SparseWireCodec(p=0.25, block=128,
+                           value_dtype="float16").wire_bits_per_element() \
+        == pytest.approx(5.75)
