@@ -94,3 +94,13 @@ def main(rows: List[str]) -> None:
         rows.append(
             f"kernel.wire_bits_per_elem_sparse{int(p_keep * 100)},0,"
             f"{8.0 * kops.payload_nbytes(p) / (1 << 20):.4f}")
+
+    # the SAME figures through the one wire-format registry the runtime and
+    # netsim consume (make_wire_format specs; eval_shape-measured, no model):
+    # kernel containers and WireFormat containers must agree byte for byte
+    from repro.distributed.wire import make_wire_format
+
+    for spec in ("quant:8", "quant:4", "quant:3", "sparse:0.25", "fp16"):
+        wire = make_wire_format(spec)
+        rows.append(f"wire.{spec.replace(':', '_')}.bits_per_elem,0,"
+                    f"{wire.wire_bits_per_element((1 << 20,)):.4f}")

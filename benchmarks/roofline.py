@@ -54,11 +54,14 @@ def main(rows: List[str], path: str = "results/dryrun.jsonl") -> None:
         if "wire_bits_per_element" in r:
             # measured from the encoded payload's container nbytes at dry-run
             # time — matches the s8/u32 (or sparse f32+u32) collective-permute
-            # operands in the HLO.  Every codec measures now, the sparse
-            # value+index format included, so the old ".modeled" row suffix is
-            # gone for good.
+            # operands in the HLO.  Every wire format measures, so no row
+            # needs a ".modeled" suffix.
             rows.append(f"roofline.{tag}.wire_bits_per_elem,0,"
                         f"{r['wire_bits_per_element']:.4f}")
+        if "gossip_degree" in r:
+            # payload rounds per iteration: the GossipPlan's shift count
+            # (ring 2, circulant torus 4) — what netsim charges latency for
+            rows.append(f"roofline.{tag}.gossip_degree,0,{r['gossip_degree']}")
 
 
 if __name__ == "__main__":

@@ -1,47 +1,58 @@
 """Compression sweep: how aggressive can DCD vs ECD go? (paper §5.4 / Fig. 4)
 
-Sweeps quantization bits {8, 4, 3, 2} plus the sparse value+index codec
-(random-k / top-k) on rings of 8 and 16 nodes and reports the distance to the
-global optimum, next to the theoretical DCD budget ``alpha < (1-rho)/(2 mu)``.
-Measured outcome matches the paper's own Fig. 4b: DCD keeps converging even
-past its (sufficient, not necessary) alpha budget, while ECD — whose
-extrapolated z-values grow with t — diverges at 4 bits.
+Sweeps wire-format specs — quantization bits {8, 4, 3, 2} plus the sparse
+value+index codec (random-k / top-k) — on rings of 8 and 16 nodes and reports
+the distance to the global optimum, next to the theoretical DCD budget
+``alpha < (1-rho)/(2 mu)``.  Measured outcome matches the paper's own Fig. 4b:
+DCD keeps converging even past its (sufficient, not necessary) alpha budget,
+while ECD — whose extrapolated z-values grow with t — diverges at 4 bits.
 
-Every wire figure in the table is measured from the payload's real container
-nbytes — the sparsifiers ship fp32 values + bit-packed indices now, so their
-rows carry no modeled-figure disclaimer.
+Every row is one ``make_wire_format`` spec; the stacked-reference operator is
+its ``compressor_for`` view, so the sweep exercises exactly the objects the
+sharded runtime gossips with, and every wire figure in the table is measured
+from the payload's real container nbytes.
 
-    PYTHONPATH=src python examples/compare_compression.py
+    PYTHONPATH=src python examples/compare_compression.py [--quick]
 """
+import argparse
+
 import jax
 
-from repro.core import (
-    RandomQuantizer,
-    RandomSparsifier,
-    TopKSparsifier,
-    make_algorithm,
-    make_topology,
-    spectral_info,
-)
+from repro.core import compressor_for, make_algorithm, make_topology, spectral_info
 from repro.core.compression import measured_alpha
 from repro.core.testbed import make_problem, run
+from repro.distributed.wire import make_wire_format
+
+
+# fixed-capacity sparsifiers: wire bits measured from the value+index
+# containers (block 128 => 7-bit packed indices per kept value).  Unlike
+# stochastic-rounding quantization — whose error is bounded by one bin, so
+# DCD survives far past its alpha budget — random-k's error scales with
+# ||z|| itself (alpha = sqrt(1/p - 1) > 1 for p < 0.5), and DCD genuinely
+# diverges at p=0.25: exactly the failure mode the paper's alpha condition
+# is about.  Top-k keeps alpha < 1 without rescaling and stays stable.
+SPECS = [
+    ("8b", "quant:8:32"),
+    ("4b", "quant:4:32"),
+    ("3b", "quant:3:32"),
+    ("2b", "quant:2:32"),
+    ("rk.5", "sparse:0.5"),
+    ("rk.25", "sparse:0.25"),
+    ("top.25", "sparse:0.25:topk"),
+]
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: n=8 only, 150 steps (no convergence claims)")
+    args = ap.parse_args()
+    T = 150 if args.quick else 600
+
     z = jax.random.normal(jax.random.key(0), (4096,))
-    sweep = [(f"{bits}b", RandomQuantizer(bits=bits, block_size=32))
-             for bits in (8, 4, 3, 2)]
-    # fixed-capacity sparsifiers: wire bits measured from the value+index
-    # containers (block 128 => 7-bit packed indices per kept value).  Unlike
-    # stochastic-rounding quantization — whose error is bounded by one bin, so
-    # DCD survives far past its alpha budget — random-k's error scales with
-    # ||z|| itself (alpha = sqrt(1/p - 1) > 1 for p < 0.5), and DCD genuinely
-    # diverges at p=0.25: exactly the failure mode the paper's alpha condition
-    # is about.  Top-k keeps alpha < 1 without rescaling and stays stable.
-    sweep += [("rk.5", RandomSparsifier(p=0.5, block_size=128)),
-              ("rk.25", RandomSparsifier(p=0.25, block_size=128)),
-              ("top.25", TopKSparsifier(p=0.25, block_size=128))]
-    for n in (8, 16):
+    sweep = [(tag, compressor_for(make_wire_format(spec)))
+             for tag, spec in SPECS]
+    for n in (8,) if args.quick else (8, 16):
         info = spectral_info(make_topology("ring", n))
         print(f"\nring n={n}:  spectral gap={info.spectral_gap:.3f}  "
               f"DCD alpha budget={info.dcd_alpha_max():.3f}")
@@ -55,7 +66,7 @@ def main():
             res = {}
             for name in ("dcd", "ecd"):
                 h = run(problem, make_algorithm(name, n, "ring", comp),
-                        T=600, lr=0.01, eval_every=600)
+                        T=T, lr=0.01, eval_every=T)
                 res[name] = h["final_dist_opt"]
             flag = "  <-- alpha over DCD budget" if alpha > info.dcd_alpha_max() else ""
             print(f"{tag:>7} {wire:>12.2f} {alpha:>8.3f} "

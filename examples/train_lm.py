@@ -20,7 +20,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--algo", default="dcd", choices=["cpsgd", "dpsgd", "naive", "dcd", "ecd"])
-    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--wire", default="quant:8",
+                    help="gossip wire-format spec, e.g. quant:4, sparse:0.25:topk, fp16")
+    ap.add_argument("--topology", default="ring",
+                    help="gossip plan name: ring, chain, torus, torus2d, star, full")
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--big", action="store_true",
@@ -35,7 +38,8 @@ def main():
         cfg = dataclasses.replace(base, n_layers=4, d_model=256, n_heads=8,
                                   n_kv_heads=4, d_ff=1024, vocab=512, head_dim=32)
 
-    tc = TrainConfig(algo=args.algo, bits=args.bits, n_nodes=args.nodes,
+    tc = TrainConfig(algo=args.algo, wire=args.wire, topology=args.topology,
+                     n_nodes=args.nodes,
                      seq_len=128, global_batch=args.nodes * 4, steps=args.steps,
                      lr=1e-3, warmup=20, optimizer="adamw", ckpt_dir=args.ckpt_dir,
                      reduced=False)

@@ -1,10 +1,12 @@
 """The paper's contribution: compressed decentralized SGD (DCD/ECD-PSGD)."""
 from repro.core.compression import (
     Compressor,
+    HalfPrecisionCompressor,
     IdentityCompressor,
     RandomQuantizer,
     RandomSparsifier,
     TopKSparsifier,
+    compressor_for,
     make_compressor,
     measured_alpha,
 )

@@ -6,9 +6,19 @@ The paper requires ``E[C(z)] = z`` (unbiased) with either
   Theorem 1 needs ``(1-rho)² - 4 mu² alpha² > 0``), or
 * a *bounded variance*  ``E||C(z) - z||² <= sigma_tilde²/2``  (ECD-PSGD, Assumption 2).
 
+Every operator here is a **thin stacked-reference view over a
+:class:`repro.distributed.wire.WireFormat`** (exposed as ``Compressor.wire``):
+the encode/decode implementation lives in ONE place — the wire module shared
+with the sharded runtime — and this module adds the paper-facing operator API
+(PRNG-key calls, alpha bounds, Monte-Carlo diagnostics).  There is exactly one
+implementation path per format; the differential test tier drives the stacked
+algorithms through these views and asserts bit-identical payloads against the
+sharded runtime.
+
 Implemented operators:
 
 * :class:`IdentityCompressor`  — alpha = 0 (recovers exact D-PSGD).
+* :class:`HalfPrecisionCompressor` — deterministic fp16 cast (16 wire bits).
 * :class:`RandomQuantizer`     — stochastic rounding to ``bits``-bit signed levels
   with a per-block max-abs scale (the paper's "random quantization", footnote 1).
 * :class:`RandomSparsifier`    — fixed-capacity random-k: a seeded uniform
@@ -19,90 +29,96 @@ Implemented operators:
   Koloskova et al. / DeepSqueeze, which treat sparsification as a first-class
   compressor for decentralized training).
 
-Each operator exposes the *wire format* explicitly (``compress`` -> payload pytree,
-``decompress`` -> reconstructed array) so the distributed runtime can put the small
-payload — not the fp32 tensor — on the network, and ``wire_bits_per_element`` so the
-network cost model and the roofline analysis can account for it.
+Every wire figure is *measured*, never modeled: ``wire_bits_per_element`` is
+derived from the payload's real container sizes via ``jax.eval_shape`` on the
+wire format's encode (asserted in tests/test_compression.py).
 
-Every wire format here is *real*, not modeled.  The quantizer bit-packs every
-width 2..7 into uint32 words via the bit-exact stream layout of
-kernels/quant.py (codes straddle word boundaries, so 3-bit really ships ~3
-wire bits/element — the paper's low-bit sweet spot), while 8-bit ships its
-int8 container.  The sparsifiers ship a fixed-capacity ``{values: fp32/fp16,
-indices}`` payload whose block-local indices ride the same stream layout at
-``ceil(log2(block))`` bits each — there is no dense tensor left in any
-payload, and no modeled figure left in the registry.  For every operator,
-``wire_bits_per_element`` is derived from the payload's container sizes via
-``jax.eval_shape`` on ``compress`` (model == measured by construction;
-asserted in tests/test_compression.py).
-
-All operators are pure functions of a PRNG key: jit/vmap/shard_map friendly.
+Keys: the operators accept either a jax PRNG key (independent randomness per
+call — the Monte-Carlo property tests) or a plain integer step counter, in
+which case the wire module's (step, salt, leaf) seeding is used verbatim —
+the stacked reference then produces payloads bit-identical to the sharded
+runtime at the same step (packed sparse indices included).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from functools import partial
+import warnings
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import payload_nbytes
-from repro.kernels.ref import (
-    aligned_block,
-    assert_packable,
-    pack_codes,
-    packed_auto,
-    sparse_geometry,
-    sparse_scatter_2d_ref,
-    sparse_select_pack_2d_ref,
-    sparse_unpack_idx,
-    unpack_codes,
+from repro.distributed.wire import (
+    Fp16Wire,
+    IdentityWire,
+    QuantWire,
+    SparseWire,
+    WireFormat,
+    leaf_seed,
 )
+Payload = Any  # pytree of wire arrays
 
-Payload = Any  # pytree of arrays
 
-
-@functools.lru_cache(maxsize=256)
-def _measured_wire_bits(comp: "Compressor", n: int) -> float:
-    """Wire bits/element from the *actual* payload containers (via eval_shape)."""
-    payload = jax.eval_shape(
-        comp.compress, jax.random.key(0), jax.ShapeDtypeStruct((n,), jnp.float32))
-    return 8.0 * payload_nbytes(payload) / n
+def _is_prng_key(key) -> bool:
+    dtype = getattr(key, "dtype", None)
+    return dtype is not None and jnp.issubdtype(dtype, jax.dtypes.prng_key)
 
 
 class Compressor:
-    """Base class: unbiased stochastic compression ``C``."""
+    """Base class: unbiased stochastic compression ``C`` as a view over a
+    :class:`WireFormat` (``self.wire``); subclasses provide the wire object
+    and the paper-facing bounds."""
 
     name: str = "base"
+    salt: int = 0
+
+    @property
+    def wire(self) -> WireFormat:
+        """The shared wire-format object this operator is a view over."""
+        raise NotImplementedError
+
+    def _seed(self, key) -> jax.Array:
+        """PRNG key -> 32 random bits; integer step -> the wire module's
+        (step, salt, leaf 0) seed (bit-compatible with the sharded runtime
+        and with the kernel wrappers in kernels/ops.py)."""
+        if _is_prng_key(key):
+            return jax.random.bits(key, (1,), jnp.uint32)
+        return leaf_seed(jnp.asarray(key), self.salt, 0)
 
     def compress(self, key: jax.Array, x: jax.Array) -> Payload:
-        raise NotImplementedError
+        """``x`` (any shape) -> wire payload of the flattened leaf."""
+        return self.wire.encode(x.reshape(-1), self._seed(key))
 
     def decompress(self, payload: Payload, like: jax.ShapeDtypeStruct) -> jax.Array:
-        raise NotImplementedError
+        n = int(np.prod(like.shape)) if like.shape else 1
+        flat = self.wire.decode(payload, jax.ShapeDtypeStruct((n,), like.dtype))
+        return flat.reshape(like.shape)
 
     def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
         """``C(x)`` — compress-then-decompress (what the receiver reconstructs)."""
         return self.decompress(self.compress(key, x), jax.ShapeDtypeStruct(x.shape, x.dtype))
 
     def wire_bits_per_element(self, shape=None) -> float:
-        raise NotImplementedError
-
-    @property
-    def wire_is_modeled(self) -> bool:
-        """True when ``wire_bits_per_element`` is an *idealized model* rather
-        than the measured nbytes of the in-memory payload containers."""
-        return False
+        """Measured wire bits/element of the actual payload containers."""
+        return self.wire.wire_bits_per_element(shape)
 
     # --- pytree helpers -------------------------------------------------
     def tree_apply(self, key: jax.Array, tree: Any) -> Any:
-        """Apply ``C`` to every leaf of a pytree with independent keys."""
-        leaves, treedef = jax.tree.flatten(tree)
-        keys = jax.random.split(key, len(leaves))
-        return jax.tree.unflatten(treedef, [self(k, l) for k, l in zip(keys, leaves)])
+        """Apply ``C`` to every leaf of a pytree.
+
+        With a PRNG key: independent split keys per leaf.  With an integer
+        step counter: the wire module's (step, salt, leaf index) seeding —
+        exactly the sharded runtime's encode, so both runs produce
+        bit-identical payloads (the differential tier pins this)."""
+        if _is_prng_key(key):
+            leaves, treedef = jax.tree.flatten(tree)
+            keys = jax.random.split(key, len(leaves))
+            return jax.tree.unflatten(
+                treedef, [self(k, l) for k, l in zip(keys, leaves)])
+        step = jnp.asarray(key).astype(jnp.int32).reshape(())
+        treedef, payloads = self.wire.encode_tree(tree, step, self.salt)
+        return self.wire.decode_tree(treedef, payloads, tree)
 
     def tree_compress(self, key: jax.Array, tree: Any):
         leaves, treedef = jax.tree.flatten(tree)
@@ -125,23 +141,32 @@ class IdentityCompressor(Compressor):
     """No-op compression: ``C(z) = z`` (alpha = 0, sigma_tilde = 0)."""
 
     name: str = "identity"
+    salt: int = 0
 
-    def compress(self, key, x):
-        return x
-
-    def decompress(self, payload, like):
-        return payload
+    @property
+    def wire(self) -> WireFormat:
+        return IdentityWire()
 
     def wire_bits_per_element(self, shape=None) -> float:
         return 32.0
 
+    def alpha_bound(self) -> float:
+        return 0.0
 
-def _stochastic_round(key: jax.Array, v: jax.Array) -> jax.Array:
-    """Unbiased stochastic rounding of ``v`` to the two adjacent integers."""
-    floor = jnp.floor(v)
-    frac = v - floor
-    u = jax.random.uniform(key, v.shape, dtype=v.dtype)
-    return floor + (u < frac).astype(v.dtype)
+
+@dataclasses.dataclass(frozen=True)
+class HalfPrecisionCompressor(Compressor):
+    """Deterministic fp16 cast: 16 wire bits/element, relative error 2^-11."""
+
+    name: str = "fp16"
+    salt: int = 0
+
+    @property
+    def wire(self) -> WireFormat:
+        return Fp16Wire()
+
+    def alpha_bound(self) -> float:
+        return 2.0 ** -11
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,8 +185,10 @@ class RandomQuantizer(Compressor):
     wire change.
 
     ``use_kernel=True`` routes through the Pallas TPU kernels (kernels/quant.py,
-    fused quantize+pack); the default pure-jnp path is the reference semantics
-    (kernels/ref.py shares the hash and the word layout).
+    fused quantize+pack); the default path is the shared
+    :class:`~repro.distributed.wire.QuantWire` jnp reference — both use the
+    same counter-based PCG hash, so they emit identical payloads for the same
+    key (kernels/ref.py shares the hash and the word layout).
     """
 
     bits: int = 8
@@ -169,29 +196,23 @@ class RandomQuantizer(Compressor):
     name: str = "quant"
     use_kernel: bool = False
     pack: Optional[bool] = None
+    salt: int = 0
 
     def __post_init__(self):
-        assert 2 <= self.bits <= 8, "2..8-bit levels supported"
-        if self.pack:   # explicit request: the geometry must support it
-            assert_packable(self.bits, self.block_size)
+        # constructing the wire validates (bits range, explicit-pack geometry)
+        self.wire  # noqa: B018
+
+    @property
+    def wire(self) -> QuantWire:
+        return QuantWire(bits=self.bits, block=self.block_size, pack=self.pack)
 
     @property
     def packed(self) -> bool:
-        """Auto mode (``pack=None``) packs whenever the block geometry allows
-        it — a block that is not a whole number of stream groups (e.g. 3-bit
-        with block_size 16 < 32 codes/group) falls back to the int8 container,
-        honestly reported by the measured ``wire_bits_per_element``."""
-        return packed_auto(self.bits, self.block_size) if self.pack is None \
-            else self.pack
+        return self.wire.packed
 
     @property
     def levels(self) -> int:
         return 2 ** (self.bits - 1) - 1
-
-    def _block_for(self, n: int) -> int:
-        if self.packed:
-            return aligned_block(self.block_size, n, bits=self.bits)
-        return min(self.block_size, max(n, 1))
 
     def compress(self, key, x):
         if self.use_kernel:
@@ -199,35 +220,7 @@ class RandomQuantizer(Compressor):
 
             return kops.quantize(key, x, bits=self.bits,
                                  block_size=self.block_size, pack=self.packed)
-        x = x.astype(jnp.float32)
-        n = x.size
-        bs = self._block_for(n)
-        pad = (-n) % bs
-        flat = jnp.pad(x.reshape(-1), (0, pad))
-        blocks = flat.reshape(-1, bs)
-        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
-        safe = jnp.where(scale > 0, scale, 1.0)
-        v = blocks / safe * self.levels
-        q = _stochastic_round(key, v)
-        q = jnp.clip(q, -self.levels, self.levels).astype(jnp.int8)
-        if self.packed:
-            q = pack_codes(q, bits=self.bits)
-        return {"codes": q, "scale": scale.astype(jnp.float32)}
-
-    def decompress(self, payload, like):
-        q = payload["codes"]
-        if q.dtype == jnp.uint32:  # packed wire format is self-describing
-            q = unpack_codes(q, bits=self.bits)
-        blocks = q.astype(jnp.float32) * (payload["scale"] * jnp.float32(1.0 / self.levels))
-        flat = blocks.reshape(-1)
-        n = int(np.prod(like.shape)) if like.shape else 1
-        return flat[:n].reshape(like.shape).astype(like.dtype)
-
-    def wire_bits_per_element(self, shape=None) -> float:
-        # derived from the payload's real container sizes, not a formula: packed
-        # widths cost bits + 32/block; unpacked widths cost their int8 container
-        n = int(np.prod(shape)) if shape is not None else self.block_size
-        return _measured_wire_bits(self, n)
+        return super().compress(key, x)
 
     def alpha_bound(self) -> float:
         """Worst-case signal-to-noise ratio alpha for this quantizer.
@@ -242,7 +235,8 @@ class RandomQuantizer(Compressor):
 
 @dataclasses.dataclass(frozen=True)
 class _SparseCodecCompressor(Compressor):
-    """Shared machinery of the fixed-capacity sparsifiers.
+    """Shared machinery of the fixed-capacity sparsifiers: a view over
+    :class:`~repro.distributed.wire.SparseWire`.
 
     Wire format (per ``block_size``-element block, real containers — no dense
     tensor, no modeled figure):
@@ -255,8 +249,8 @@ class _SparseCodecCompressor(Compressor):
     The payload shapes are fixed functions of (p, block) — SPMD-friendly: no
     data-dependent shapes reach the compiled program.  ``use_kernel=True``
     routes through the fused Pallas select+gather+pack kernel; the default
-    pure-jnp path is the reference semantics (kernels/ref.py, same selection
-    order, word-for-word identical payloads).
+    path is the shared wire object's jnp reference (same selection order,
+    word-for-word identical payloads).
     """
 
     p: float = 0.25
@@ -264,27 +258,31 @@ class _SparseCodecCompressor(Compressor):
     value_dtype: str = "float32"    # "float32" | "float16" (wire container)
     use_kernel: bool = False
     mode: str = "randk"
+    salt: int = 0
 
     def __post_init__(self):
-        assert 0.0 < self.p <= 1.0, f"keep fraction p must be in (0, 1], got {self.p}"
-        assert self.value_dtype in ("float32", "float16"), self.value_dtype
+        self.wire  # noqa: B018  (validates p, mode, value_dtype)
+
+    @property
+    def wire(self) -> SparseWire:
+        return SparseWire(p=self.p, block=self.block_size, mode=self.mode,
+                          value_dtype=self.value_dtype)
 
     @property
     def _vdtype(self):
         return jnp.float16 if self.value_dtype == "float16" else jnp.float32
 
-    def _block_for(self, n: int) -> int:
-        return min(self.block_size, max(n, 1))
-
     def _keep_fraction(self, n: int) -> float:
         """The *effective* keep fraction k/block (>= p because k is a ceil)."""
-        block = self._block_for(n)
+        from repro.kernels.ref import sparse_geometry
+
+        block = min(self.block_size, max(n, 1))
         k, _, _, _ = sparse_geometry(block, self.p)
         return k / block
 
     def compress(self, key, x):
         n = x.size
-        bs = self._block_for(n)
+        bs = min(self.block_size, max(n, 1))
         # kernel and jnp paths share the SAME shrunken block geometry, so they
         # emit identical payloads for every n; a shrunken block off the
         # kernel's 128-lane contract stays on the jnp reference path (the
@@ -294,28 +292,7 @@ class _SparseCodecCompressor(Compressor):
 
             return kops.sparse_compress(key, x, p=self.p, block_size=bs,
                                         mode=self.mode, value_dtype=self._vdtype)
-        x = x.astype(jnp.float32)
-        pad = (-n) % bs
-        blocks = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, bs)
-        seed = jax.random.bits(key, (1,), dtype=jnp.uint32)
-        vals, idx = sparse_select_pack_2d_ref(blocks, seed, p=self.p,
-                                              mode=self.mode,
-                                              value_dtype=self._vdtype)
-        return {"values": vals, "idx": idx}
-
-    def decompress(self, payload, like):
-        n = int(np.prod(like.shape)) if like.shape else 1
-        bs = self._block_for(n)
-        k = payload["values"].shape[-1]
-        idx = sparse_unpack_idx(payload["idx"], block=bs, k=k)
-        dense = sparse_scatter_2d_ref(payload["values"], idx, cols=bs)
-        return dense.reshape(-1)[:n].reshape(like.shape).astype(like.dtype)
-
-    def wire_bits_per_element(self, shape=None) -> float:
-        # derived from the payload's real container sizes (values + packed
-        # index words), not a formula — same honesty contract as the quantizer
-        n = int(np.prod(shape)) if shape is not None else self.block_size
-        return _measured_wire_bits(self, n)
+        return super().compress(key, x)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -365,8 +342,30 @@ def measured_alpha(comp: Compressor, key: jax.Array, z: jax.Array, n_samples: in
     return float(jnp.mean(errs) / (jnp.linalg.norm(z) + 1e-12))
 
 
+def compressor_for(wire, salt: int = 0) -> Compressor:
+    """The stacked-reference view of a wire format (or spec string): the
+    matching :class:`Compressor` sharing the SAME wire object, so the stacked
+    algorithms and the sharded runtime encode through one implementation."""
+    from repro.distributed.wire import make_wire_format
+
+    w = make_wire_format(wire)
+    if isinstance(w, QuantWire):
+        return RandomQuantizer(bits=w.bits, block_size=w.block, pack=w.pack,
+                               salt=salt)
+    if isinstance(w, SparseWire):
+        cls = TopKSparsifier if w.mode == "topk" else RandomSparsifier
+        return cls(p=w.p, block_size=w.block, value_dtype=w.value_dtype,
+                   mode=w.mode, salt=salt)
+    if isinstance(w, Fp16Wire):
+        return HalfPrecisionCompressor(salt=salt)
+    if isinstance(w, IdentityWire):
+        return IdentityCompressor(salt=salt)
+    raise TypeError(f"no stacked view registered for wire format {w!r}")
+
+
 REGISTRY = {
     "identity": lambda **kw: IdentityCompressor(),
+    "fp16": lambda **kw: HalfPrecisionCompressor(),
     "quant": lambda **kw: RandomQuantizer(**kw),
     "sparsify": lambda **kw: RandomSparsifier(**kw),
     "topk": lambda **kw: TopKSparsifier(**kw),
@@ -374,4 +373,11 @@ REGISTRY = {
 
 
 def make_compressor(name: str, **kwargs) -> Compressor:
+    """Deprecated: construct the operator class directly, or go through
+    ``make_wire_format(spec)`` + :func:`compressor_for`.  Still resolves the
+    old registry names to the new view objects."""
+    warnings.warn(
+        "make_compressor(name=...) is deprecated; use the compressor classes "
+        "directly or compressor_for(make_wire_format(spec))",
+        DeprecationWarning, stacklevel=2)
     return REGISTRY[name](**kwargs)

@@ -2,525 +2,51 @@
 
 Global view: decentralized state is *stacked* — every array gets a leading node
 axis sharded over the mesh ``node`` axis, so "node i's replica" is slice ``i``.
-Ring gossip is ``jnp.roll(payload, ±1, axis=0)``, which XLA lowers to
-``collective-permute`` of exactly the payload we roll.  Because DCD/ECD roll the
-**codes + per-block scales** — int8 at 8 bits, bit-packed uint32 words at 2/4
-bits — the compiled program's wire traffic on the node axis is the compressed
-payload: ~4x traffic reduction at 8 bits and ~8x at packed 4 bits is visible in
-the dry-run HLO, not just claimed.
+Gossip is compiled from a :class:`~repro.distributed.gossip.GossipPlan`: each
+plan shift is ``jnp.roll(payload, s, axis=0)``, which XLA lowers to one
+``collective-permute`` of exactly the payload we roll.  Because DCD/ECD roll
+the **encoded wire payload** — int8 codes at 8 bits, bit-packed uint32 words
+at 2..7 bits, fixed-capacity values + packed index words for the sparse format
+— the compiled program's wire traffic on the node axis is the compressed
+payload: the traffic reduction is visible in the dry-run HLO, not just claimed.
+
+The codec is any :class:`~repro.distributed.wire.WireFormat` (quant / sparse /
+fp16 / identity, or a registered new one); the topology is any plan
+``make_gossip_plan`` compiles (ring / chain / torus / ... or a custom mixing
+matrix).  Compressor and topology are independently pluggable, per the paper's
+§2 setup and the Koloskova/PowerGossip framing.
 
 Algorithm state (beyond params X and optimizer moments):
-* D-PSGD/naive: none (naive re-quantizes X each round).
-* DCD: ``rep_l``/``rep_r`` — replicas of the two ring neighbors, advanced by the
-  received compressed deltas; the invariant ``rep_l == roll(X, +1)`` is tested.
-* ECD: ``tilde_self``/``tilde_l``/``tilde_r`` — extrapolation estimates with the
-  (1-2/s, 2/s) update of Algorithm 2.
+* D-PSGD/naive: none (naive re-encodes X each round).
+* DCD: one replica tree per plan shift (``rep{s:+d}``) — the neighbor models,
+  advanced by the received compressed deltas; the invariant
+  ``rep{s} == roll(X, s)`` is tested.
+* ECD: ``tilde_self`` plus one estimate tree per shift (``tilde{s:+d}``) with
+  the (1-2/s, 2/s) update of Algorithm 2.
 
 Stochastic rounding uses the same counter-based PCG hash as the Pallas kernel
-(kernels/ref.py), seeded by (step, node, leaf) — deterministic, key-free inside
-the compiled step.
+(kernels/ref.py), seeded by (step, salt, leaf) — deterministic, key-free inside
+the compiled step, and identical to the stacked reference's seeding.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import os
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels.ops import payload_nbytes as _payload_nbytes
-from repro.kernels.quant import (
-    pcg_hash,
-    sparse_scatter_axpy_2d,
-    uniform_from_hash,
-    unpack_dequant_axpy_2d,
+from repro.distributed.gossip import (
+    GossipPlan,
+    make_gossip_plan,
+    plan_mix,
+    roll_tree,
 )
-from repro.kernels.ref import (
-    SPARSE_MODES,
-    aligned_block,
-    assert_packable,
-    pack_codes,
-    packed_auto,
-    sparse_geometry,
-    sparse_pack_idx,
-    sparse_unpack_idx,
-    unpack_codes,
-)
+from repro.distributed.wire import WireFormat, make_wire_format
 from repro.optim.optimizers import Optimizer, apply_updates
 
-
-def _block_counters(xb: jax.Array) -> jax.Array:
-    """Per-element flat counter of a blocked view, from per-dim iotas
-    (elementwise => sharding-friendly).  Counters live in uint32 (mod 2^32):
-    >4B-element leaves reuse counter values, which only correlates the
-    randomness of far-apart element pairs — harmless for unbiasedness."""
-    idx = jnp.zeros(xb.shape, jnp.uint32)
-    stride = 1
-    for d in range(xb.ndim - 1, -1, -1):
-        idx = idx + jax.lax.broadcasted_iota(jnp.uint32, xb.shape, d) * \
-            jnp.uint32(stride % (1 << 32))
-        stride *= xb.shape[d]
-    return idx
-
-
-def _quantize_nd(x: jax.Array, seed: jax.Array, *, bits: int, block: int):
-    """Stochastic quantization with blocks along the LAST dim only.
-
-    Sharding-preserving by construction: leading dims keep their partitioning
-    and the last-dim split (d -> (d/block, block)) divides across shards, so no
-    all-gather is inserted before the quantize — flattening the whole leaf
-    (the naive formulation) forces GSPMD to gather every sharded parameter
-    (§Perf iteration 3: measured +21 GiB/chip of gathers on granite train).
-    """
-    levels = 2 ** (bits - 1) - 1
-    last = x.shape[-1]
-    pad = (-last) % block
-    if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    xb = x.reshape(*x.shape[:-1], (last + pad) // block, block).astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
-    safe = jnp.where(scale > 0.0, scale, 1.0)
-    v = xb * (levels / safe)
-    u = uniform_from_hash(_block_counters(xb), seed)
-    floor = jnp.floor(v)
-    q = floor + (u < (v - floor)).astype(jnp.float32)
-    return jnp.clip(q, -levels, levels).astype(jnp.int8), scale
-
-
-def _dequantize_nd(codes: jax.Array, scale: jax.Array, *, bits: int,
-                   orig_last: int, dtype) -> jax.Array:
-    levels = 2 ** (bits - 1) - 1
-    # reciprocal multiply == the kernels' dequant formulation (see kernels/ref.py)
-    vals = codes.astype(jnp.float32) * (scale * jnp.float32(1.0 / levels))
-    out = vals.reshape(*vals.shape[:-2], vals.shape[-2] * vals.shape[-1])
-    return out[..., :orig_last].astype(dtype)
-
-
-def _sparsify_nd(x: jax.Array, seed: jax.Array, *, p: float, block: int,
-                 mode: str, value_dtype=jnp.float32):
-    """Fixed-capacity sparse selection with blocks along the LAST dim only.
-
-    Sharding-preserving exactly like :func:`_quantize_nd`: leading dims keep
-    their partitioning, and the selection (a stable argsort + gather along the
-    block axis) never mixes elements across blocks.  Canonical selection order
-    — descending key, ties toward the smaller index — matches the kernels and
-    the kernels/ref.py oracle word for word (same PCG counters for randk).
-    """
-    k, _, kpad, _ = sparse_geometry(block, p)
-    last = x.shape[-1]
-    pad = (-last) % block
-    if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    xb = x.reshape(*x.shape[:-1], (last + pad) // block, block).astype(jnp.float32)
-    if mode == "randk":
-        key = pcg_hash(_block_counters(xb) ^ seed)
-        order = jnp.argsort(key ^ jnp.uint32(0xFFFFFFFF), axis=-1, stable=True)
-    else:
-        order = jnp.argsort(-jnp.abs(xb), axis=-1, stable=True)
-    sel = order[..., :k]
-    vals = jnp.take_along_axis(xb, sel, axis=-1)
-    if mode == "randk":
-        vals = vals * jnp.float32(block / k)   # inclusion prob k/block => unbiased
-    return vals.astype(value_dtype), \
-        sparse_pack_idx(sel.astype(jnp.uint32), block=block, kpad=kpad)
-
-
-def _sparse_scatter_nd(values: jax.Array, packed_idx: jax.Array, *, block: int,
-                       orig_last: int, dtype) -> jax.Array:
-    """Inverse of :func:`_sparsify_nd`: scatter each block's values back into
-    a dense last dim.  Indices within a block are duplicate-free, so each
-    output lane receives at most one value — the one-hot contraction below is
-    bit-exact regardless of reduction order.  It intentionally restates
-    ``sparse_scatter_2d_ref`` over the *unreshaped* leading dims: folding them
-    into rows would reshape across the sharded node axis, which is exactly
-    what this sharding-preserving path exists to avoid (same split as
-    ``_dequantize_nd`` vs ``dequantize_2d_ref``)."""
-    k = values.shape[-1]
-    idx = sparse_unpack_idx(packed_idx, block=block, k=k)
-    lanes = jax.lax.broadcasted_iota(
-        jnp.uint32, idx.shape[:-1] + (1, block), idx.ndim)
-    hit = idx[..., :, None].astype(jnp.uint32) == lanes
-    dense = jnp.sum(
-        jnp.where(hit, values[..., :, None].astype(jnp.float32), 0.0), axis=-2)
-    out = dense.reshape(*dense.shape[:-2], dense.shape[-2] * block)
-    return out[..., :orig_last].astype(dtype)
-
-
-# --------------------------------------------------------------- payload codec
-
-@dataclasses.dataclass(frozen=True)
-class WireCodec:
-    """Quantized wire format for one pytree, vmapped over the node axis.
-
-    ``pack=True`` (default for bits in 2..7) bit-packs the codes into uint32
-    words *before* the collective-permute using the bit-exact stream layout
-    shared with the Pallas kernels (kernels/quant.py) and the jnp reference
-    codec (kernels/ref.py): codes straddle word boundaries, so *every* width
-    ships exactly ``bits`` wire bits/element plus the per-block scale.  The
-    stacked payload that ``jnp.roll`` moves over the node axis is therefore
-    the packed words + scales: a ``bits=3`` ring step ships ~3.03
-    bits/element — the paper's low-bit sweet spot as actual wire bytes (the
-    paper's own MPI implementation sent one value per byte even at 4 bits).
-
-    Packing is along the last (block) dim only, so it preserves the leaf's
-    leading-dim sharding exactly like ``_quantize_nd`` does.
-    """
-
-    bits: int = 8
-    block: int = 1024
-    pack: Optional[bool] = None
-
-    def __post_init__(self):
-        if self.pack:   # explicit request: the geometry must support it
-            assert_packable(self.bits, self.block)
-
-    @property
-    def packed(self) -> bool:
-        """Auto mode (``pack=None``) packs whenever the block geometry allows
-        it; a block that is not a whole number of stream groups falls back to
-        the int8 container (honest ~8 measured wire bits)."""
-        return packed_auto(self.bits, self.block) if self.pack is None else self.pack
-
-    def _block_for(self, last: int) -> int:
-        if self.packed:
-            return aligned_block(self.block, last, bits=self.bits)
-        return min(self.block, max(last, 1))
-
-    def encode(self, tree: Any, step: jax.Array, salt: int) -> Any:
-        """tree leaves (n, ...) -> {codes (n, ..., nblk, W) uint32 packed words
-        (or (n, ..., nblk, block) int8 unpacked), scale (n, ..., nblk, 1) f32}
-        — blocked over the last dim so the quantize stays shard-local (see
-        _quantize_nd)."""
-        leaves, treedef = jax.tree_util.tree_flatten(tree)
-        out = []
-        for li, leaf in enumerate(leaves):
-            seed = (step.astype(jnp.uint32) * jnp.uint32(2654435761)
-                    ^ jnp.uint32(salt * 97 + li))
-            block = self._block_for(leaf.shape[-1])
-            codes, scale = _quantize_nd(leaf, seed, bits=self.bits, block=block)
-            if self.packed:
-                codes = pack_codes(codes, bits=self.bits)
-            out.append({"codes": codes, "scale": scale})
-        return treedef, out
-
-    def decode(self, treedef, payloads, like_tree: Any) -> Any:
-        likes = jax.tree_util.tree_leaves(like_tree)
-        outs = []
-        for payload, like in zip(payloads, likes):
-            codes = unpack_codes(payload["codes"], bits=self.bits) \
-                if self.packed else payload["codes"]
-            outs.append(_dequantize_nd(codes, payload["scale"], bits=self.bits,
-                                       orig_last=like.shape[-1], dtype=like.dtype))
-        return jax.tree_util.tree_unflatten(treedef, outs)
-
-    @property
-    def wire_format(self) -> str:
-        return "packed-stream-u32" if self.packed else "int8"
-
-    def wire_bits_per_element(self) -> float:
-        """Asymptotic wire bits/element for leaves whose last dim fills whole
-        blocks: the packed-word container amortizes to exactly ``bits``, any
-        unpacked width rides a full int8 byte, plus the per-block fp32 scale.
-        Leaves with last dim < ``block`` shrink their block and pay more scale
-        overhead — use :meth:`payload_nbytes` for the measured per-tree number
-        (the dryrun records that, not this)."""
-        container = float(self.bits) if self.packed else 8.0
-        return container + 32.0 / self.block
-
-    def payload_nbytes(self, tree: Any) -> int:
-        """Measured wire bytes of one encoded gossip payload for ``tree``
-        (shape-only: evaluated via eval_shape, nothing is computed)."""
-        payloads = jax.eval_shape(
-            lambda t: self.encode(t, jnp.zeros((), jnp.int32), salt=0)[1], tree)
-        return _payload_nbytes(payloads)
-
-    def decode_axpy(self, treedef, payloads, acc_tree: Any, weight,
-                    acc_weight=1.0) -> Any:
-        """``acc_weight * acc + weight * decode(payloads)`` leafwise, as ONE
-        fused Pallas kernel per leaf (packed codecs): unpack -> dequantize ->
-        scale-and-accumulate in a single VMEM pass, so neither the
-        reconstructed fp32 neighbor tensor nor a pre-scaled accumulator ever
-        lands in HBM.  Both weights may be floats or traced scalars (ECD's
-        1-2/s decay and 2/s blend).  Falls back to decode + axpy in jnp for
-        unpacked codecs.  Output leaves keep ``acc``'s dtypes (matching the
-        reference ``(acc_weight*acc + weight*decoded).astype(acc.dtype)``)."""
-        accs = jax.tree_util.tree_leaves(acc_tree)
-        outs = []
-        for payload, acc in zip(payloads, accs):
-            # the kernel's lane contract is block % 128 == 0 (quant.py); small
-            # leaves whose aligned block shrank below that (e.g. an 8-wide
-            # bias) take the jnp path — negligible traffic, and Mosaic never
-            # sees an off-contract tile on real TPUs
-            block = payload["codes"].shape[-1] * 32 // self.bits \
-                if self.packed else payload["codes"].shape[-1]
-            if self.packed and block % 128 == 0:
-                outs.append(_fused_axpy_leaf(payload["codes"], payload["scale"],
-                                             acc, bits=self.bits, weight=weight,
-                                             acc_weight=acc_weight))
-            else:
-                codes = unpack_codes(payload["codes"], bits=self.bits) \
-                    if self.packed else payload["codes"]
-                d = _dequantize_nd(codes, payload["scale"],
-                                   bits=self.bits, orig_last=acc.shape[-1],
-                                   dtype=jnp.float32)
-                outs.append((acc_weight * acc + weight * d).astype(acc.dtype))
-        return jax.tree_util.tree_unflatten(treedef, outs)
-
-
-def _fused_axpy_leaf(codes: jax.Array, scale: jax.Array, acc: jax.Array, *,
-                     bits: int, weight, acc_weight=1.0) -> jax.Array:
-    """One leaf of :meth:`WireCodec.decode_axpy` through the fused kernel.
-
-    codes (lead..., nblk, W) uint32 + scale (lead..., nblk, 1) -> folded into a
-    (lead*nblk, block) 2-D view for the kernel; the leading (node) axis stays
-    outermost, so the fold preserves leading-dim sharding under shard_map."""
-    block = codes.shape[-1] * 32 // bits
-    nblk = codes.shape[-2]
-    lead = acc.shape[:-1]
-    orig_last = acc.shape[-1]
-    accf = acc.astype(jnp.float32)
-    pad = nblk * block - orig_last
-    if pad:
-        accf = jnp.pad(accf, [(0, 0)] * (accf.ndim - 1) + [(0, pad)])
-    rows = int(np.prod(lead, dtype=np.int64)) * nblk
-    out = unpack_dequant_axpy_2d(
-        codes.reshape(rows, codes.shape[-1]),
-        scale.reshape(rows, 1),
-        accf.reshape(rows, block),
-        bits=bits, weight=weight, acc_weight=acc_weight,
-        interpret=jax.default_backend() != "tpu")
-    out = out.reshape(*lead, nblk * block)[..., :orig_last]
-    return out.astype(acc.dtype)
-
-
-@dataclasses.dataclass(frozen=True)
-class SparseWireCodec:
-    """Sparse wire format for one pytree, vmapped over the node axis.
-
-    The fixed-capacity counterpart of :class:`WireCodec`: every
-    ``block``-element block of a leaf's last dim keeps ``k = ceil(p * block)``
-    values (``randk``: a seeded uniform k-subset rescaled by ``block/k``;
-    ``topk``: the k largest magnitudes), and the stacked payload the ring
-    collective-permute moves is ``{values: (n, ..., nblk, k) fp32/fp16,
-    idx: (n, ..., nblk, words) uint32}`` — the block-local indices bit-packed
-    to ``ceil(log2(block))`` bits each via the same stream layout as the
-    quantized codec.  Fixed capacity keeps every shape static (SPMD-friendly:
-    one collective-permute per leaf, no data-dependent sizes), and blocking
-    along the last dim only preserves leading-dim sharding exactly like
-    ``_quantize_nd``.
-
-    Seeding matches :class:`WireCodec` — (step, salt, leaf index) through the
-    same PCG hash — so the stacked reference driven through
-    :class:`WireCompressor` produces bit-identical payloads (indices included)
-    to the sharded runtime; the differential tier asserts it.
-    """
-
-    p: float = 0.25
-    block: int = 128
-    mode: str = "randk"
-    value_dtype: str = "float32"    # "float32" | "float16" (wire container)
-
-    def __post_init__(self):
-        assert 0.0 < self.p <= 1.0, f"keep fraction p must be in (0, 1], got {self.p}"
-        assert self.mode in SPARSE_MODES, self.mode
-        assert self.value_dtype in ("float32", "float16"), self.value_dtype
-
-    @property
-    def packed(self) -> bool:
-        """The index stream is always bit-packed — there is no unpacked
-        container for this codec (``make_dist_train_step`` keys its fused
-        default off this, like the packed quantized codec)."""
-        return True
-
-    @property
-    def wire_format(self) -> str:
-        vals = "f16" if self.value_dtype == "float16" else "f32"
-        return f"sparse-{self.mode}-{vals}+packed-idx-u32"
-
-    @property
-    def _vdtype(self):
-        return jnp.float16 if self.value_dtype == "float16" else jnp.float32
-
-    def _block_for(self, last: int) -> int:
-        return min(self.block, max(last, 1))
-
-    def encode(self, tree: Any, step: jax.Array, salt: int) -> Any:
-        leaves, treedef = jax.tree_util.tree_flatten(tree)
-        out = []
-        for li, leaf in enumerate(leaves):
-            seed = (step.astype(jnp.uint32) * jnp.uint32(2654435761)
-                    ^ jnp.uint32(salt * 97 + li))
-            block = self._block_for(leaf.shape[-1])
-            vals, idx = _sparsify_nd(leaf, seed, p=self.p, block=block,
-                                     mode=self.mode, value_dtype=self._vdtype)
-            out.append({"values": vals, "idx": idx})
-        return treedef, out
-
-    def decode(self, treedef, payloads, like_tree: Any) -> Any:
-        likes = jax.tree_util.tree_leaves(like_tree)
-        outs = []
-        for payload, like in zip(payloads, likes):
-            outs.append(_sparse_scatter_nd(
-                payload["values"], payload["idx"],
-                block=self._block_for(like.shape[-1]),
-                orig_last=like.shape[-1], dtype=like.dtype))
-        return jax.tree_util.tree_unflatten(treedef, outs)
-
-    def wire_bits_per_element(self) -> float:
-        """Asymptotic wire bits/element for leaves whose last dim fills whole
-        blocks, from the real container sizes: k values plus the packed index
-        words.  Use :meth:`payload_nbytes` for the measured per-tree number
-        (the dryrun records that, not this)."""
-        k, _, _, words = sparse_geometry(self.block, self.p)
-        vbits = 16 if self.value_dtype == "float16" else 32
-        return (k * vbits + words * 32) / self.block
-
-    def payload_nbytes(self, tree: Any) -> int:
-        """Measured wire bytes of one encoded gossip payload for ``tree``
-        (shape-only: evaluated via eval_shape, nothing is computed)."""
-        payloads = jax.eval_shape(
-            lambda t: self.encode(t, jnp.zeros((), jnp.int32), salt=0)[1], tree)
-        return _payload_nbytes(payloads)
-
-    def decode_axpy(self, treedef, payloads, acc_tree: Any, weight,
-                    acc_weight=1.0) -> Any:
-        """``acc_weight * acc + weight * decode(payloads)`` leafwise, as ONE
-        fused Pallas kernel per leaf: unpack the index stream -> scatter ->
-        scale-and-accumulate in a single VMEM pass (the reconstructed dense
-        fp32 neighbor delta never lands in HBM).  Same gating as the quantized
-        codec: leaves whose block misses the 128-lane kernel contract take the
-        jnp reference path."""
-        accs = jax.tree_util.tree_leaves(acc_tree)
-        outs = []
-        for payload, acc in zip(payloads, accs):
-            block = self._block_for(acc.shape[-1])
-            if block % 128 == 0:
-                outs.append(_fused_sparse_axpy_leaf(
-                    payload["values"], payload["idx"], acc, block=block,
-                    weight=weight, acc_weight=acc_weight))
-            else:
-                d = _sparse_scatter_nd(payload["values"], payload["idx"],
-                                       block=block, orig_last=acc.shape[-1],
-                                       dtype=jnp.float32)
-                outs.append((acc_weight * acc + weight * d).astype(acc.dtype))
-        return jax.tree_util.tree_unflatten(treedef, outs)
-
-
-def _fused_sparse_axpy_leaf(values: jax.Array, packed_idx: jax.Array,
-                            acc: jax.Array, *, block: int, weight,
-                            acc_weight=1.0) -> jax.Array:
-    """One leaf of :meth:`SparseWireCodec.decode_axpy` through the fused
-    kernel: fold (lead..., nblk, k) into a (lead*nblk, k) 2-D view — the
-    leading (node) axis stays outermost, so the fold preserves leading-dim
-    sharding under shard_map, exactly like :func:`_fused_axpy_leaf`."""
-    nblk = values.shape[-2]
-    lead = acc.shape[:-1]
-    orig_last = acc.shape[-1]
-    accf = acc.astype(jnp.float32)
-    pad = nblk * block - orig_last
-    if pad:
-        accf = jnp.pad(accf, [(0, 0)] * (accf.ndim - 1) + [(0, pad)])
-    rows = int(np.prod(lead, dtype=np.int64)) * nblk
-    out = sparse_scatter_axpy_2d(
-        values.reshape(rows, values.shape[-1]),
-        packed_idx.reshape(rows, packed_idx.shape[-1]),
-        accf.reshape(rows, block),
-        weight=weight, acc_weight=acc_weight,
-        interpret=jax.default_backend() != "tpu")
-    out = out.reshape(*lead, nblk * block)[..., :orig_last]
-    return out.astype(acc.dtype)
-
-
-@dataclasses.dataclass(frozen=True)
-class WireCompressor:
-    """Adapter: the stacked reference algorithms in :mod:`repro.core.algorithms`
-    driven by a codec's deterministic PCG compression (quantized
-    :class:`WireCodec` or :class:`SparseWireCodec` — anything with the
-    ``encode``/``decode`` tree protocol).
-
-    The reference steps call ``comp.tree_apply(key, tree)``; here the ``key``
-    slot carries the *step counter* of the matching sharded run, so both runs
-    derive identical per-leaf seeds (step, salt, leaf index) and produce
-    bit-identical codes — packed sparse indices included.  The differential
-    test tier pins the sharded DCD/ECD runtime against the stacked semantics
-    through this adapter.
-    """
-
-    codec: Any
-    salt: int
-    name: str = "wire"
-
-    def tree_apply(self, key, tree: Any) -> Any:
-        step = jnp.asarray(key).astype(jnp.int32).reshape(())
-        treedef, payloads = self.codec.encode(tree, step, salt=self.salt)
-        return self.codec.decode(treedef, payloads, tree)
-
-    def __call__(self, key, x: jax.Array) -> jax.Array:
-        return jax.tree_util.tree_leaves(self.tree_apply(key, [x]))[0]
-
-    def wire_bits_per_element(self, shape=None) -> float:
-        return self.codec.wire_bits_per_element()
-
-
-def _roll(tree: Any, shift: int) -> Any:
-    """Neighbor exchange: collective-permute over the sharded node axis."""
-    return jax.tree.map(lambda l: jnp.roll(l, shift, axis=0), tree)
-
-
-def gossip_shifts(topology: str, n: int) -> Tuple[float, Dict[int, float]]:
-    """(self-weight, {node-axis shift: weight}) for the uniform-weight topology.
-
-    ring:  neighbors at shifts +-1, weights 1/3 (paper's experimental setup).
-    torus: circulant graph with jumps {+-1, +-c} (c ~ sqrt(n)) — a flattened
-           2-D torus whose rows chain into each other.  4 neighbors at weight
-           1/5 each; same degree/spectral class as the row-wrapped torus, but
-           every neighbor is a uniform node-axis shift, so each exchange is one
-           collective-permute exactly like the ring.
-    Degenerate sizes fall back to the ring.
-    """
-    if n == 1:
-        return 1.0, {}
-    if topology == "ring" or n < 9:
-        if n == 2:
-            return 0.5, {1: 0.25, -1: 0.25}
-        return 1.0 / 3.0, {1: 1.0 / 3.0, -1: 1.0 / 3.0}
-    if topology == "torus":
-        r = int(np.floor(np.sqrt(n)))
-        while n % r:
-            r -= 1
-        c = n // r
-        if r < 3 or c < 3:   # too thin for 4 distinct neighbors
-            return 1.0 / 3.0, {1: 1.0 / 3.0, -1: 1.0 / 3.0}
-        w = 1.0 / 5.0
-        return w, {1: w, -1: w, c: w, -c: w}
-    raise ValueError(f"unknown gossip topology {topology!r}")
-
-
-def _mix(w_s: float, shifts: Dict[int, float], x: Any, neighbors: Dict[int, Any]) -> Any:
-    """w_s * x + sum_k w_k * neighbors[k] (treewise)."""
-    out = jax.tree.map(lambda l: w_s * l, x)
-    for k, w in shifts.items():
-        out = jax.tree.map(lambda a, b: a + w * b, out, neighbors[k])
-    return out
-
-
-def _axpy(a, x, y):  # a*x + y  treewise with scalar a
-    return jax.tree.map(lambda xx, yy: a * xx + yy, x, y)
-
-
-def _sub(a, b):
-    return jax.tree.map(lambda x, y: x - y, a, b)
-
-
-def _add(a, b):
-    return jax.tree.map(lambda x, y: x + y, a, b)
-
-
-def _scale(a, x):
-    return jax.tree.map(lambda xx: a * xx, x)
+_roll = roll_tree
 
 
 # --------------------------------------------------------------- state
@@ -528,18 +54,38 @@ def _scale(a, x):
 class DistState(NamedTuple):
     params: Any              # stacked (n, ...)
     opt: Any                 # optimizer state (stacked moments)
-    aux: Dict[str, Any]      # algorithm-specific stacked trees
+    aux: Dict[str, Any]      # algorithm-specific stacked trees, keyed by shift
     step: jax.Array
 
 
-def init_dist_state(algo: str, params_single: Any, n_nodes: int, opt: Optimizer,
-                    aux_dtype=None, topology: str = "ring") -> DistState:
-    """``aux_dtype``: storage dtype for replicas/estimates (bf16 on the biggest
-    archs — they hold reconstructed quantized values, so bf16 rounding is well
-    below the quantization bin; see DESIGN.md plans table).  ``topology``: the
-    gossip graph ("ring" | "torus") — one replica/estimate tree per neighbor."""
-    X = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape), params_single)
-    _, shifts = gossip_shifts(topology, n_nodes)
+def _resolve_plan(plan, topology: Optional[str]) -> GossipPlan:
+    """plan may be a GossipPlan or (deprecated) an int node count combined
+    with a ``topology="ring"|"torus"`` string."""
+    if isinstance(plan, GossipPlan):
+        assert topology is None, \
+            "pass either a GossipPlan or the deprecated topology= string, not both"
+        return plan
+    n = int(plan)
+    if topology is not None:
+        warnings.warn(
+            "topology=<str> with an integer node count is deprecated; pass "
+            f"plan=make_gossip_plan({topology!r}, n) instead",
+            DeprecationWarning, stacklevel=3)
+        return make_gossip_plan(topology, n)
+    return GossipPlan.ring(n)
+
+
+def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
+                    aux_dtype=None, topology: Optional[str] = None) -> DistState:
+    """``plan``: a :class:`GossipPlan` (or an int node count => ring) — one
+    replica/estimate tree per plan shift.  ``aux_dtype``: storage dtype for
+    replicas/estimates (bf16 on the biggest archs — they hold reconstructed
+    quantized values, so bf16 rounding is well below the quantization bin; see
+    DESIGN.md plans table)."""
+    plan = _resolve_plan(plan, topology)
+    n_nodes = plan.n
+    X = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape),
+                     params_single)
 
     def aux_copy():
         if aux_dtype is None:
@@ -549,33 +95,35 @@ def init_dist_state(algo: str, params_single: Any, n_nodes: int, opt: Optimizer,
 
     aux: Dict[str, Any] = {}
     if algo == "dcd":
-        aux = {f"rep{k:+d}": aux_copy() for k in shifts}
+        aux = {f"rep{s:+d}": aux_copy() for s in plan.shift_list}
     elif algo == "ecd":
         aux = {"tilde_self": aux_copy()}
-        aux.update({f"tilde{k:+d}": aux_copy() for k in shifts})
-    return DistState(params=X, opt=opt.init(X), aux=aux, step=jnp.zeros((), jnp.int32))
+        aux.update({f"tilde{s:+d}": aux_copy() for s in plan.shift_list})
+    return DistState(params=X, opt=opt.init(X), aux=aux,
+                     step=jnp.zeros((), jnp.int32))
 
 
 # --------------------------------------------------------------- the step
 
-def _make_decode_axpy(codec, mesh) -> Optional[Callable]:
+def _make_decode_axpy(wire: WireFormat, mesh) -> Optional[Callable]:
     """Fused receive path, wrapped in shard_map over the node axis when a mesh
     is given.  Each shard hands its local slab of the stacked payload
     (codes + scales, or sparse values + packed index words) and accumulator
-    straight to the fused Pallas kernel.
+    straight to the fused Pallas kernel — the gate lives in the wire format's
+    own ``decode_axpy`` (one 128-lane contract for every format).
 
     Returns ``None`` for meshes with axes beyond "node": wrapping only the
     node axis would force GSPMD to gather every fsdp/model-sharded leaf at the
     shard_map boundary (the §Perf-iteration-3 regression this runtime exists
     to avoid), and shard_map's ``auto`` escape hatch for the remaining axes
     check-fails inside XLA's SPMD partitioner on the current pin — the caller
-    then keeps the sharding-preserving jnp reference codec.  Setting
+    then keeps the sharding-preserving jnp reference path.  Setting
     ``REPRO_SHARD_MAP_AUTO=1`` opts the multi-axis case into the ``auto``
     path anyway — the CI ``jax-nightly`` probe (tests/probe_shard_map_auto.py)
     uses it to re-test the check-fail on newer XLA pins (ROADMAP item).
     """
     if mesh is None or "node" not in getattr(mesh, "axis_names", ()):
-        return codec.decode_axpy
+        return wire.decode_axpy_tree
     nonnode = frozenset(a for a in mesh.axis_names if a != "node")
     auto_opt_in = os.environ.get("REPRO_SHARD_MAP_AUTO", "").lower() \
         not in ("", "0", "false")
@@ -589,7 +137,7 @@ def _make_decode_axpy(codec, mesh) -> Optional[Callable]:
 
     def dec_axpy(treedef, payloads, acc_tree, weight, acc_weight=1.0):
         def inner(payloads_, acc_, w_, aw_):
-            return codec.decode_axpy(treedef, payloads_, acc_, w_, aw_)
+            return wire.decode_axpy_tree(treedef, payloads_, acc_, w_, aw_)
 
         return shard_map(
             inner, mesh,
@@ -605,44 +153,51 @@ def make_dist_train_step(
     loss_fn: Callable[[Any, Any], Tuple[jax.Array, Dict]],
     algo: str,
     opt: Optimizer,
-    codec: Optional[Any],    # WireCodec | SparseWireCodec | None
-    n_nodes: int,
+    wire: Optional[Any],     # WireFormat | spec str | None (full precision)
+    plan,                    # GossipPlan | int node count (=> ring)
     lr_schedule: Callable[[jax.Array], jax.Array],
-    topology: str = "ring",
     *,
     mesh: Optional[Any] = None,
     fused: Optional[bool] = None,
+    topology: Optional[str] = None,   # deprecated: use plan=make_gossip_plan(...)
 ):
     """Build ``step(state, batch) -> (state, metrics)``.
 
     ``loss_fn(params_i, batch_i)`` is the per-node loss; it is vmapped over the
     stacked node axis.  ``batch`` leaves are (n, per_node_batch, ...).
-    ``topology``: gossip graph — "ring" (2 neighbors) or "torus" (4 neighbors,
-    better spectral gap at large n at 2x the payload rounds).
 
-    ``fused`` (default: auto — on iff the codec packs) routes every DCD/ECD
-    receive-side decode through the fused axpy Pallas kernel —
-    ``unpack_dequant_axpy`` for the quantized codec, ``sparse_scatter_axpy``
-    for the sparse one (one VMEM pass: unpack -> dequantize/scatter ->
-    accumulate) — instead of the jnp reference codec + XLA fusion.  When ``mesh`` (a pure node-axis mesh) is
+    ``wire``: the gossip payload codec — any :class:`WireFormat` or a
+    ``make_wire_format`` spec string (``"quant:4"``, ``"sparse:0.25:topk"``,
+    ``"fp16"``); ``None`` means the raw fp32 leaves ride the permute (only
+    meaningful for cpsgd/dpsgd).  ``plan``: the gossip graph — any
+    :class:`GossipPlan` (``make_gossip_plan("chain", n)``, a compiled mixing
+    matrix, ...) or an int node count for the default ring.  DCD/ECD aux trees
+    key off ``plan.shifts``; one collective-permute per shift per round.
+
+    ``fused`` (default: auto — on iff the wire format packs) routes every
+    DCD/ECD receive-side decode through the format's fused axpy Pallas kernel
+    (one VMEM pass: unpack -> dequantize/scatter -> accumulate) instead of the
+    jnp reference path + XLA fusion.  When ``mesh`` (a pure node-axis mesh) is
     given, the fused decode runs under ``shard_map`` so each shard feeds its
     local payload slab straight into the kernel; without a mesh the kernel is
     called inline (single-process runs).  Multi-axis meshes fall back to the
-    reference codec — see :func:`_make_decode_axpy`.
+    reference path — see :func:`_make_decode_axpy`.
     """
     assert algo in ("cpsgd", "dpsgd", "naive", "dcd", "ecd")
-    w_s, shifts = gossip_shifts(topology, n_nodes)
-    use_fused = (codec is not None and codec.packed) if fused is None else bool(fused)
+    plan = _resolve_plan(plan, topology)
+    if wire is not None:
+        wire = make_wire_format(wire)
+    use_fused = (wire is not None and wire.packed) if fused is None else bool(fused)
 
     dec_axpy = None
-    if codec is not None and use_fused:
-        dec_axpy = _make_decode_axpy(codec, mesh)
-    if codec is not None and dec_axpy is None:
+    if wire is not None and use_fused:
+        dec_axpy = _make_decode_axpy(wire, mesh)
+    if wire is not None and dec_axpy is None:
         def dec_axpy(treedef, payloads, acc_tree, weight, acc_weight=1.0):
             # reference path: decode at f32 (like the fused kernel), then axpy
             likes = jax.tree.map(
                 lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), acc_tree)
-            dec = codec.decode(treedef, payloads, likes)
+            dec = wire.decode_tree(treedef, payloads, likes)
             return jax.tree.map(
                 lambda a, d: (acc_weight * a + weight * d).astype(a.dtype),
                 acc_tree, dec)
@@ -664,44 +219,48 @@ def make_dist_train_step(
 
         elif algo == "dpsgd":
             # full-precision gossip: rolls X itself (fp32 on the wire)
-            X_mix = _mix(w_s, shifts, X, {k: _roll(X, k) for k in shifts})
+            X_mix = plan_mix(plan, X, {s: _roll(X, s) for s in plan.shift_list})
             X_new = apply_updates(X_mix, updates)
 
         elif algo == "naive":
             # compress the exchanged models directly — provably non-convergent
-            tdef, payload = codec.encode(X, state.step, salt=1)
-            X_mix = _mix(w_s, shifts, codec.decode(tdef, payload, X),
-                         {k: codec.decode(tdef, _roll(payload, k), X) for k in shifts})
+            tdef, payload = wire.encode_tree(X, state.step, salt=1)
+            X_mix = plan_mix(
+                plan, wire.decode_tree(tdef, payload, X),
+                {s: wire.decode_tree(tdef, _roll(payload, s), X)
+                 for s in plan.shift_list})
             X_new = apply_updates(X_mix, updates)
 
         elif algo == "dcd":
             X_half = apply_updates(
-                _mix(w_s, shifts, X, {k: aux[f"rep{k:+d}"] for k in shifts}), updates)
-            Z = _sub(X_half, X)
-            tdef, payload = codec.encode(Z, state.step, salt=2)
+                plan_mix(plan, X, {s: aux[f"rep{s:+d}"] for s in plan.shift_list}),
+                updates)
+            Z = jax.tree.map(lambda a, b: a - b, X_half, X)
+            tdef, payload = wire.encode_tree(Z, state.step, salt=2)
             # receive side: one fused unpack+dequant+axpy kernel per leaf
             X_new = dec_axpy(tdef, payload, X, 1.0)
-            for k in shifts:
-                aux[f"rep{k:+d}"] = dec_axpy(
-                    tdef, _roll(payload, k), aux[f"rep{k:+d}"], 1.0)
+            for s in plan.shift_list:
+                aux[f"rep{s:+d}"] = dec_axpy(
+                    tdef, _roll(payload, s), aux[f"rep{s:+d}"], 1.0)
 
         else:  # ecd
-            s = (state.step + 1).astype(jnp.float32)
-            X_mix = _mix(w_s, shifts, aux["tilde_self"],
-                         {k: aux[f"tilde{k:+d}"] for k in shifts})
+            s_t = (state.step + 1).astype(jnp.float32)
+            X_mix = plan_mix(plan, aux["tilde_self"],
+                             {s: aux[f"tilde{s:+d}"] for s in plan.shift_list})
             X_new = apply_updates(X_mix, updates)
-            Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s) * a + 0.5 * s * b, X, X_new)
-            tdef, payload = codec.encode(Z, state.step, salt=3)
-            decay = 1.0 - 2.0 / s
-            blend = 2.0 / s
+            Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s_t) * a + 0.5 * s_t * b,
+                             X, X_new)
+            tdef, payload = wire.encode_tree(Z, state.step, salt=3)
+            decay = 1.0 - 2.0 / s_t
+            blend = 2.0 / s_t
             # decay*tilde + blend*decode in ONE fused pass per leaf: the decay
             # scale rides the kernel's acc_weight operand, so no pre-scaled
             # f32 accumulator is ever written to HBM
             aux["tilde_self"] = dec_axpy(tdef, payload, aux["tilde_self"],
                                          blend, decay)
-            for k in shifts:
-                aux[f"tilde{k:+d}"] = dec_axpy(tdef, _roll(payload, k),
-                                               aux[f"tilde{k:+d}"], blend, decay)
+            for s in plan.shift_list:
+                aux[f"tilde{s:+d}"] = dec_axpy(tdef, _roll(payload, s),
+                                               aux[f"tilde{s:+d}"], blend, decay)
 
         consensus = sum(
             jnp.sum((l - jnp.mean(l, axis=0, keepdims=True)) ** 2)
@@ -712,6 +271,39 @@ def make_dist_train_step(
             "consensus": consensus,
             **{k: jnp.mean(v) for k, v in metrics.items()},
         }
-        return DistState(params=X_new, opt=opt_state, aux=aux, step=state.step + 1), out_metrics
+        return DistState(params=X_new, opt=opt_state, aux=aux,
+                         step=state.step + 1), out_metrics
 
     return step
+
+
+# ------------------------------------------------------- deprecated spellings
+
+def gossip_shifts(topology: str, n: int) -> Tuple[float, Dict[int, float]]:
+    """Deprecated: use :func:`repro.distributed.gossip.make_gossip_plan`.
+
+    Returns the old ``(self_weight, {shift: weight})`` view of the compiled
+    plan (uniform-weight topologies only)."""
+    warnings.warn("gossip_shifts is deprecated; use make_gossip_plan(topology, n)",
+                  DeprecationWarning, stacklevel=2)
+    plan = make_gossip_plan(topology, n)
+    assert plan.uniform, f"{topology!r} compiles to per-node weights; use the plan"
+    return plan.self_weight, dict(plan.shifts)
+
+
+_DEPRECATED = {
+    "WireCodec": "QuantWire",
+    "SparseWireCodec": "SparseWire",
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        from repro.distributed import wire as _wire
+
+        new = _DEPRECATED[name]
+        warnings.warn(
+            f"repro.distributed.decentralized.{name} is deprecated; use "
+            f"repro.distributed.wire.{new}", DeprecationWarning, stacklevel=2)
+        return getattr(_wire, new)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

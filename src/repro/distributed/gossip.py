@@ -1,0 +1,234 @@
+"""Compiled gossip plans: mixing matrix W -> node-axis collective-permutes.
+
+The sharded runtime keeps every replica stacked along a leading ``node`` axis;
+its only communication primitive is ``jnp.roll(leaf, s, axis=0)`` — one
+``collective-permute`` of the (compressed) payload per *shift* ``s``.  A
+:class:`GossipPlan` is the compiled form of a mixing matrix in that basis:
+
+    ``(X W)_i  ==  self_weight_i * X_i + sum_s w_s[i] * roll(X, s)_i``
+
+where each shift ``s`` carries either one scalar weight (circulant W — ring,
+flattened torus: every node weighs the neighbor identically) or an (n,)
+per-node weight vector (banded-but-not-circulant W — chain, 2-D torus row
+wraps: the shift still moves the full payload, nodes mask what they use).
+
+``from_mixing_matrix`` compiles any W whose support fits a small set of shift
+diagonals and attaches its :class:`~repro.core.topology.SpectralInfo`; dense
+graphs (star at large n, fully connected) need ~n shifts — one permute each —
+so the default ``max_shifts`` refuses them with a clear error rather than
+silently compiling an O(n)-round gossip step (pass ``max_shifts=n`` to force
+it, or run arbitrary W on the stacked reference in :mod:`repro.core`).
+
+``make_gossip_plan(spec, n)`` resolves topology names — ``ring`` / ``chain``
+/ ``torus`` (the circulant flattened torus the runtime always used, 4 uniform
+shifts) / ``torus2d`` (the exact 2-D torus via ``core.topology``, 6 masked
+shifts) / ``star`` / ``full`` — or passes an existing plan through, so the
+next topology is a registration, not a fork of the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topo
+from repro.core.topology import SpectralInfo
+
+ShiftWeight = Union[float, np.ndarray]   # scalar (circulant) or (n,) per-node
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GossipPlan:
+    """One gossip graph, compiled to node-axis shifts.
+
+    ``shifts`` maps each node-axis shift to its weight — a float when every
+    node applies the same weight (circulant W) or an (n,) vector otherwise.
+    ``degree`` (= number of shifts = collective-permutes = payload rounds per
+    gossip step) is what the netsim cost model charges; ``spectral`` carries
+    rho/mu/spectral-gap for the paper's Theorem-1 budget checks.
+    """
+
+    n: int
+    self_weight: ShiftWeight
+    shifts: Tuple[Tuple[int, ShiftWeight], ...]
+    spectral: Optional[SpectralInfo] = None
+    name: str = "custom"
+
+    def __post_init__(self):
+        assert self.n >= 1
+
+    @property
+    def degree(self) -> int:
+        """Shifts per gossip step == collective-permutes == payload rounds."""
+        return len(self.shifts)
+
+    @property
+    def shift_list(self) -> Tuple[int, ...]:
+        return tuple(s for s, _ in self.shifts)
+
+    @property
+    def uniform(self) -> bool:
+        """True iff every weight is a scalar (strictly circulant W)."""
+        return not isinstance(self.self_weight, np.ndarray) and \
+            all(not isinstance(w, np.ndarray) for _, w in self.shifts)
+
+    def mixing_matrix(self) -> np.ndarray:
+        """Reconstruct W (the exact inverse of :meth:`from_mixing_matrix`)."""
+        W = np.zeros((self.n, self.n))
+        W[np.arange(self.n), np.arange(self.n)] = self.self_weight
+        for s, w in self.shifts:
+            # roll(X, s)[i] = X[(i - s) % n]  =>  weight lands on column i - s
+            rows = np.arange(self.n)
+            W[rows, (rows - s) % self.n] += w
+        return W
+
+    @classmethod
+    def from_mixing_matrix(cls, W: np.ndarray, *, name: str = "custom",
+                           max_shifts: int = 8, tol: float = 1e-12,
+                           validate: bool = True) -> "GossipPlan":
+        """Compile a mixing matrix into node-axis shifts.
+
+        Decomposes W into its roll diagonals ``w_s[i] = W[i, (i - s) % n]``;
+        shifts are canonicalized into ``(-n/2, n/2]`` and per-shift weights
+        collapse to a scalar when uniform.  Raises a ``ValueError`` when the
+        support needs more than ``max_shifts`` diagonals — W is then not
+        circulant-representable within the permute budget (each shift is one
+        collective-permute of the full payload)."""
+        W = np.asarray(W, dtype=np.float64)
+        assert W.ndim == 2 and W.shape[0] == W.shape[1], W.shape
+        n = W.shape[0]
+        if validate and n > 1:
+            topo.check_mixing_matrix(W)
+        rows = np.arange(n)
+        shifts = []
+        for d in range(1, n):                      # diagonal d <=> shift s
+            s = d if d <= n // 2 else d - n
+            v = W[rows, (rows - s) % n]
+            if np.max(np.abs(v)) <= tol:
+                continue
+            w: ShiftWeight = float(v[0]) if np.allclose(v, v[0], atol=tol) \
+                else np.ascontiguousarray(v)
+            shifts.append((s, w))
+        if len(shifts) > max_shifts:
+            raise ValueError(
+                f"W is not circulant-representable within {max_shifts} "
+                f"node-axis shifts: its support spans {len(shifts)} shift "
+                f"diagonals, i.e. {len(shifts)} collective-permutes of the "
+                f"full payload per gossip step.  Pass max_shifts={len(shifts)} "
+                "to compile it anyway, or run arbitrary W on the stacked "
+                "reference (repro.core.algorithms).")
+        diag = W[rows, rows]
+        self_w: ShiftWeight = float(diag[0]) \
+            if np.allclose(diag, diag[0], atol=tol) else np.ascontiguousarray(diag)
+        spectral = topo.spectral_info(W) if n > 1 else None
+        return cls(n=n, self_weight=self_w,
+                   shifts=tuple(sorted(shifts, key=lambda sw: sw[0])),
+                   spectral=spectral, name=name)
+
+    # ------------------------------------------------------------ factories
+    @classmethod
+    def ring(cls, n: int) -> "GossipPlan":
+        """Uniform-weight ring: 2 shifts at 1/3 (paper's experiment setup)."""
+        return cls.from_mixing_matrix(topo.ring(n), name="ring")
+
+    @classmethod
+    def chain(cls, n: int) -> "GossipPlan":
+        """Metropolis path graph: shifts +-1 with per-node masked weights
+        (the wrap entry is zero — endpoints have one neighbor)."""
+        if n < 2:
+            return cls.ring(n)
+        return cls.from_mixing_matrix(topo.chain(n), name="chain")
+
+    @classmethod
+    def torus(cls, n: int) -> "GossipPlan":
+        """Circulant flattened torus: jumps {+-1, +-c} (c ~ sqrt(n)) at 1/5 —
+        a 2-D torus whose rows chain into each other.  Same degree/spectral
+        class as the row-wrapped torus, but every neighbor is one *uniform*
+        node-axis shift.  Degenerate sizes fall back to the ring."""
+        if n < 9:
+            return cls.ring(n)
+        r = int(np.floor(np.sqrt(n)))
+        while n % r:
+            r -= 1
+        c = n // r
+        if r < 3 or c < 3:   # too thin for 4 distinct neighbors
+            return cls.ring(n)
+        W = np.zeros((n, n))
+        rows = np.arange(n)
+        W[rows, rows] = 0.2
+        for s in (1, -1, c, -c):
+            W[rows, (rows - s) % n] += 0.2
+        return cls.from_mixing_matrix(W, name="torus")
+
+
+def _named(name: str) -> Callable[[int], GossipPlan]:
+    if name == "torus2d":
+        # the exact 2-D torus: 4 graph neighbors but 6 shift diagonals (the
+        # row-wrap columns ride their own masked +-(c-1) shifts)
+        return lambda n: GossipPlan.from_mixing_matrix(
+            topo.make_topology("torus", n), name="torus2d", max_shifts=max(n, 8))
+    if name in ("star", "full"):
+        # dense support: ~n shifts, one permute each — exact but expensive;
+        # compiled on request with the budget widened to n
+        return lambda n: GossipPlan.from_mixing_matrix(
+            topo.make_topology(name, n), name=name, max_shifts=max(n, 8))
+    ctor = {"ring": GossipPlan.ring, "chain": GossipPlan.chain,
+            "torus": GossipPlan.torus}.get(name)
+    if ctor is None:
+        raise ValueError(
+            f"unknown gossip topology {name!r}; known: "
+            "ring, chain, torus, torus2d, star, full — or pass a GossipPlan / "
+            "mixing matrix")
+    return ctor
+
+
+GOSSIP_TOPOLOGIES = ("ring", "chain", "torus", "torus2d", "star", "full")
+
+
+def make_gossip_plan(spec, n: Optional[int] = None) -> GossipPlan:
+    """The one factory: spec -> :class:`GossipPlan`.
+
+    ``spec`` is an existing plan (checked against ``n`` and passed through), a
+    topology name (``ring`` / ``chain`` / ``torus`` / ``torus2d`` / ``star`` /
+    ``full``), or a mixing matrix (compiled via ``from_mixing_matrix``)."""
+    if isinstance(spec, GossipPlan):
+        assert n is None or spec.n == n, f"plan has n={spec.n}, caller wants {n}"
+        return spec
+    if isinstance(spec, np.ndarray) or (hasattr(spec, "ndim") and spec.ndim == 2):
+        plan = GossipPlan.from_mixing_matrix(np.asarray(spec))
+        assert n is None or plan.n == n
+        return plan
+    if not isinstance(spec, str):
+        raise TypeError(f"gossip spec must be a GossipPlan, name, or W matrix, "
+                        f"got {type(spec)}")
+    assert n is not None, "topology names need the node count n"
+    return _named(spec)(n)
+
+
+# --------------------------------------------------------- runtime primitives
+
+def roll_tree(tree: Any, shift: int) -> Any:
+    """Neighbor exchange: collective-permute over the sharded node axis."""
+    return jax.tree.map(lambda l: jnp.roll(l, shift, axis=0), tree)
+
+
+def _weight_for(w: ShiftWeight, leaf: jax.Array):
+    """Scalar weights stay python floats (weak-typed, like the seed runtime);
+    per-node vectors broadcast as (n, 1, ..., 1) in the leaf's dtype."""
+    if not isinstance(w, np.ndarray):
+        return w
+    return jnp.asarray(w, leaf.dtype).reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def plan_mix(plan: GossipPlan, x: Any, neighbors: Dict[int, Any]) -> Any:
+    """``self_weight * x + sum_s w_s * neighbors[s]`` (treewise), with per-node
+    weight vectors broadcast over the leading node axis when W is banded but
+    not circulant (chain, torus2d)."""
+    out = jax.tree.map(lambda l: _weight_for(plan.self_weight, l) * l, x)
+    for s, w in plan.shifts:
+        out = jax.tree.map(lambda a, b: a + _weight_for(w, b) * b,
+                           out, neighbors[s])
+    return out

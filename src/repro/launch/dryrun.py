@@ -2,28 +2,28 @@
 
 MUST be imported/run as a script entry: the XLA_FLAGS lines below must execute
 before jax initializes its backends (device count locks on first init).
+``REPRO_DRYRUN_DEVICES`` overrides the forced host device count (default 512 —
+the production mesh; the CI examples smoke job sets 8 and runs ``--smoke``).
 """
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + \
-    os.environ.get("XLA_FLAGS", "")
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count="
+    f"{os.environ.get('REPRO_DRYRUN_DEVICES', '512')} "
+    + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
-from repro.distributed.decentralized import (
-    SparseWireCodec,
-    WireCodec,
-    init_dist_state,
-    make_dist_train_step,
-)
+from repro.distributed.decentralized import init_dist_state, make_dist_train_step
+from repro.distributed.gossip import GOSSIP_TOPOLOGIES, make_gossip_plan
 from repro.distributed.plans import SERVE_PLANS, TRAIN_PLANS
 from repro.distributed.sharding import (
     batch_shardings,
@@ -31,10 +31,12 @@ from repro.distributed.sharding import (
     params_shardings,
     replicated,
 )
+from repro.distributed.wire import make_wire_format
 from repro.launch import analysis
 from repro.launch.mesh import derive_serve_mesh, derive_train_mesh, make_production_mesh
 from repro.launch.specs import (
     SHAPES,
+    InputShape,
     decode_cache_specs,
     params_specs,
     prefill_input_specs,
@@ -78,16 +80,9 @@ def _state_shardings(state_sds, mesh, n_routed):
     )
 
 
-def _make_codec(codec_kind: str, bits: int, p: float, sparse_mode: str):
-    if codec_kind == "sparse":
-        return SparseWireCodec(p=p, mode=sparse_mode)
-    return WireCodec(bits=bits)
-
-
 def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dcd",
-                 bits: int = 8, momentum: float = 0.0,
-                 topology: str = "ring", codec_kind: str = "quant",
-                 p: float = 0.25, sparse_mode: str = "randk") -> Dict[str, Any]:
+                 wire: str = "quant:8", topology: str = "ring",
+                 momentum: float = 0.0) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     plan = TRAIN_PLANS[arch]
@@ -98,21 +93,21 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
 
     model = build_model(cfg)
     opt = sgd(momentum=momentum)
-    codec = _make_codec(codec_kind, bits, p, sparse_mode) \
-        if algo in ("naive", "dcd", "ecd") else None
+    gossip = make_gossip_plan(topology, n)
+    codec = make_wire_format(wire) if algo in ("naive", "dcd", "ecd") else None
     loss_fn = lambda p, b: model.loss(p, b, remat=plan.remat)
     # mesh is multi-axis (node, fsdp, model): the step falls back from the
-    # shard_map-fused decode to the sharding-preserving reference codec (see
+    # shard_map-fused decode to the sharding-preserving reference path (see
     # _make_decode_axpy) — the wire payload is identical either way
-    step = make_dist_train_step(loss_fn, algo, opt, codec, n, constant(1e-2),
-                                topology=topology, mesh=mesh)
+    step = make_dist_train_step(loss_fn, algo, opt, codec, gossip, constant(1e-2),
+                                mesh=mesh)
 
     import jax.numpy as _jnp
     aux_dtype = _jnp.bfloat16 if plan.aux_dtype == "bfloat16" else None
     p_sds = params_specs(cfg)
     state_sds = jax.eval_shape(
-        lambda ps: init_dist_state(algo, ps, n, opt, aux_dtype=aux_dtype,
-                                   topology=topology), p_sds)
+        lambda ps: init_dist_state(algo, ps, gossip, opt, aux_dtype=aux_dtype),
+        p_sds)
     batch_sds = train_input_specs(cfg, shape, n)
 
     n_routed = cfg.moe.n_routed if cfg.moe else None
@@ -128,7 +123,14 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
         t2 = time.time()
     print(compiled.memory_analysis())   # proves it fits
     print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+    return _train_record(arch, shape_name, shape, algo, wire, codec, gossip,
+                         multi_pod, n, n_chips, cfg, p_sds, state_sds,
+                         batch_sds, step, compiled, t0, t1, t2)
 
+
+def _train_record(arch, shape_name, shape, algo, wire, codec, gossip, multi_pod,
+                  n, n_chips, cfg, p_sds, state_sds, batch_sds, step, compiled,
+                  t0, t1, t2) -> Dict[str, Any]:
     n_total = _tree_size(p_sds)
     n_active = analysis.active_param_count(cfg, _nonembed_params(cfg, p_sds))
     jx_flops = analysis.count_fn_flops(step, state_sds, batch_sds)
@@ -138,28 +140,23 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
         pod_size=256 if multi_pod else None)
     mem = compiled.memory_analysis()
     # wire accounting from the real payload containers (not a formula): the
-    # bytes one gossip direction actually puts on the node-axis permute.
-    # Every codec measures — the sparse value+index format included, so no
-    # record needs a "modeled" disclaimer anymore.
-    wire = {}
+    # bytes one gossip shift actually puts on the node-axis permute, times the
+    # plan degree for the per-iteration figure.  Every wire format measures.
+    wire_rec = {}
     if codec is not None:
-        payload_bytes = codec.payload_nbytes(state_sds.params)
+        payload_bytes = codec.wire_nbytes(state_sds.params)
         stacked_elems = _tree_size(state_sds.params)
-        wire = {
+        wire_rec = {
             "wire_payload_bytes": payload_bytes,
             "wire_bits_per_element": round(8.0 * payload_bytes / stacked_elems, 4),
             "wire_format": codec.wire_format,
         }
-    # codec params: bits describes the quantized codec only; sparse records
-    # carry (p, sparse_mode) instead so sweep tooling can attribute rows
-    codec_params = {"bits": bits} if codec_kind == "quant" else \
-        {"p": p, "sparse_mode": sparse_mode}
-    rec = {
+    return {
         "arch": arch, "shape": shape_name, "kind": "train", "algo": algo,
-        "codec": codec_kind, **codec_params,
-        "topology": topology, "multi_pod": multi_pod,
+        "wire": wire, "topology": gossip.name, "gossip_degree": gossip.degree,
+        "multi_pod": multi_pod,
         "n_nodes": n, "n_chips": n_chips,
-        "params_total": n_total, **wire,
+        "params_total": n_total, **wire_rec,
         "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
         "memory": {
             "argument_bytes": mem.argument_size_in_bytes,
@@ -169,7 +166,6 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
         },
         **roof.as_dict(),
     }
-    return rec
 
 
 def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool) -> Dict[str, Any]:
@@ -242,14 +238,65 @@ def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool) -> Dict[str, An
 
 
 def dryrun(arch: str, shape_name: str, *, multi_pod: bool = False, algo: str = "dcd",
-           bits: int = 8, topology: str = "ring", codec_kind: str = "quant",
-           p: float = 0.25, sparse_mode: str = "randk") -> Dict[str, Any]:
+           wire: str = "quant:8", topology: str = "ring") -> Dict[str, Any]:
     shape = SHAPES[shape_name]
     if shape.kind == "train":
         return dryrun_train(arch, shape_name, multi_pod=multi_pod, algo=algo,
-                            bits=bits, topology=topology, codec_kind=codec_kind,
-                            p=p, sparse_mode=sparse_mode)
+                            wire=wire, topology=topology)
     return dryrun_serve(arch, shape_name, multi_pod=multi_pod)
+
+
+def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
+                 wire: str = "quant:8", topology: str = "ring",
+                 steps: int = 2) -> Dict[str, Any]:
+    """Host-backend smoke: the dryrun machinery end to end on a reduced config
+    and a small forced-device mesh (REPRO_DRYRUN_DEVICES=8), then *execute*
+    ``steps`` real steps of the compiled program — the demo surface CI runs so
+    the full lower/compile/execute path can't silently rot."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    cfg = get_config(arch).reduced()
+    devs = np.array(jax.devices())
+    assert devs.size % 4 == 0, f"smoke wants a multiple of 4 devices, got {devs.size}"
+    n = 2
+    mesh = Mesh(devs.reshape(n, 2, devs.size // (2 * n)), ("node", "fsdp", "model"))
+    model = build_model(cfg)
+    opt = sgd()
+    gossip = make_gossip_plan(topology, n)
+    codec = make_wire_format(wire) if algo in ("naive", "dcd", "ecd") else None
+    step = make_dist_train_step(lambda p, b: model.loss(p, b, remat=True),
+                                algo, opt, codec, gossip, constant(1e-2),
+                                mesh=None)
+    shape = InputShape("tiny", "train", 64, 2 * n)
+    p_sds = params_specs(cfg)
+    state_sds = jax.eval_shape(lambda ps: init_dist_state(algo, ps, gossip, opt), p_sds)
+    batch_sds = train_input_specs(cfg, shape, n)
+    ssh = _state_shardings(state_sds, mesh, cfg.moe.n_routed if cfg.moe else None)
+    bsh = batch_shardings(batch_sds, mesh, node_axis=True)
+    with mesh:
+        t0 = time.time()
+        compiled = jax.jit(step, in_shardings=(ssh, bsh),
+                           out_shardings=(ssh, None)).lower(state_sds, batch_sds).compile()
+        t1 = time.time()
+        params0 = model.init(jax.random.key(0))
+        state = init_dist_state(algo, params0, gossip, opt)
+        batch = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), batch_sds)
+        for _ in range(steps):
+            state, metrics = compiled(state, batch)
+    rec = {
+        "arch": arch, "kind": "smoke", "algo": algo, "wire": wire,
+        "topology": gossip.name, "gossip_degree": gossip.degree,
+        "n_devices": int(devs.size), "compile_s": round(t1 - t0, 1),
+        "steps": steps, "loss": float(metrics["loss"]),
+    }
+    if codec is not None:
+        payload_bytes = codec.wire_nbytes(state_sds.params)
+        rec["wire_bits_per_element"] = round(
+            8.0 * payload_bytes / _tree_size(state_sds.params), 4)
+        rec["wire_format"] = codec.wire_format
+    print(f"[SMOKE OK] {json.dumps(rec)}", flush=True)
+    return rec
 
 
 def main():
@@ -259,15 +306,24 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--algo", default="dcd",
                     choices=["cpsgd", "dpsgd", "naive", "dcd", "ecd"])
-    ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--codec", default="quant", choices=["quant", "sparse"],
-                    help="gossip wire codec: quantized codes or sparse value+index")
-    ap.add_argument("--p", type=float, default=0.25,
-                    help="sparse codec keep fraction (k = ceil(p * block))")
-    ap.add_argument("--sparse-mode", default="randk", choices=["randk", "topk"])
-    ap.add_argument("--topology", default="ring", choices=["ring", "torus"])
+    ap.add_argument("--wire", default="quant:8",
+                    help="gossip wire-format spec for make_wire_format, e.g. "
+                         "quant:8, quant:4:block=1024, sparse:0.25:topk, fp16")
+    ap.add_argument("--topology", default="ring", choices=list(GOSSIP_TOPOLOGIES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-config host-backend smoke: compile + run 2 "
+                         "steps on REPRO_DRYRUN_DEVICES (set it to 8)")
     ap.add_argument("--json", default=None, help="append JSONL records here")
     args = ap.parse_args()
+
+    if args.smoke:
+        arch = (args.arch or ["granite-3-2b"])[0]
+        rec = dryrun_smoke(arch, algo=args.algo, wire=args.wire,
+                           topology=args.topology)
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        return
 
     archs = args.arch or list(ARCH_IDS)
     shapes = args.shape or list(SHAPES)
@@ -277,9 +333,8 @@ def main():
             key = f"{arch} x {shape} ({'2-pod 512' if args.multi_pod else '1-pod 256'})"
             try:
                 rec = dryrun(arch, shape, multi_pod=args.multi_pod,
-                             algo=args.algo, bits=args.bits,
-                             topology=args.topology, codec_kind=args.codec,
-                             p=args.p, sparse_mode=args.sparse_mode)
+                             algo=args.algo, wire=args.wire,
+                             topology=args.topology)
                 print(f"[OK] {key}: bottleneck={rec['bottleneck']} "
                       f"t=({rec['t_compute_s']:.2e},{rec['t_memory_s']:.2e},"
                       f"{rec['t_collective_s']:.2e})s "

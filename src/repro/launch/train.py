@@ -4,6 +4,12 @@ On this CPU container it runs the *same* stacked program as the production mesh
 (1 device => all node slices colocated, math identical); on a real cluster the
 node axis shards over the (pod x data) axes per the TrainPlan.  Used by
 examples/train_lm.py for the ~100M-model few-hundred-step runs.
+
+The gossip wire format and topology are specs, not flags-per-codec:
+``--wire quant:8`` / ``--wire sparse:0.25:topk`` / ``--wire fp16`` pick any
+registered :class:`~repro.distributed.wire.WireFormat`; ``--topology`` picks
+any :func:`~repro.distributed.gossip.make_gossip_plan` name (ring, chain,
+torus, torus2d, star, full).
 """
 from __future__ import annotations
 
@@ -14,7 +20,6 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_config
@@ -22,11 +27,11 @@ from repro.configs.base import ArchConfig
 from repro.data import DataConfig, stacked_node_batches
 from repro.distributed.decentralized import (
     DistState,
-    SparseWireCodec,
-    WireCodec,
     init_dist_state,
     make_dist_train_step,
 )
+from repro.distributed.gossip import make_gossip_plan
+from repro.distributed.wire import make_wire_format
 from repro.models.api import build_model
 from repro.optim import make_optimizer
 from repro.optim.schedules import linear_warmup_cosine
@@ -36,10 +41,8 @@ from repro.optim.schedules import linear_warmup_cosine
 class TrainConfig:
     arch: Optional[str] = None          # assigned arch id, or None for custom cfg
     algo: str = "dcd"                   # cpsgd | dpsgd | naive | dcd | ecd
-    codec: str = "quant"                # quant | sparse (gossip wire format)
-    bits: int = 8                       # quantized codec width
-    p: float = 0.25                     # sparse codec keep fraction
-    sparse_mode: str = "randk"          # randk | topk
+    wire: str = "quant:8"               # gossip wire-format spec (make_wire_format)
+    topology: str = "ring"              # gossip plan name (make_gossip_plan)
     n_nodes: int = 8
     seq_len: int = 256
     global_batch: int = 32
@@ -57,16 +60,14 @@ class TrainConfig:
 def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
     model = build_model(cfg)
     opt = make_optimizer(tc.optimizer, **({"weight_decay": 0.01} if tc.optimizer == "adamw" else {}))
-    codec = None
-    if tc.algo in ("naive", "dcd", "ecd"):
-        codec = SparseWireCodec(p=tc.p, mode=tc.sparse_mode) \
-            if tc.codec == "sparse" else WireCodec(bits=tc.bits)
+    plan = make_gossip_plan(tc.topology, tc.n_nodes)
+    wire = make_wire_format(tc.wire) if tc.algo in ("naive", "dcd", "ecd") else None
     sched = linear_warmup_cosine(tc.lr, tc.warmup, tc.steps)
     loss_fn = lambda p, b: model.loss(p, b)
-    step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, codec, tc.n_nodes, sched))
+    step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, wire, plan, sched))
 
     params0 = model.init(jax.random.key(tc.seed))
-    state = init_dist_state(tc.algo, params0, tc.n_nodes, opt)
+    state = init_dist_state(tc.algo, params0, plan, opt)
 
     dc = DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len, global_batch=tc.global_batch,
                     n_shards=tc.n_nodes, seed=tc.seed)

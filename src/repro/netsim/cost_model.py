@@ -7,23 +7,26 @@ way the paper's systems discussion does:
 
 * AllReduce (ring, full precision): 2(n-1)/n * M bytes through each NIC per
   iteration, 2(n-1) latency-bound sequential steps.
-* Decentralized (ring gossip): each node sends its payload to 2 neighbors in
-  ONE round: bytes = 2 * M * (wire_bits/32), latency = 2 rounds (send both
-  directions concurrently => 1-2 link RTTs; we charge 2).
+* Decentralized gossip: one payload exchange per **plan shift** — the
+  :class:`~repro.distributed.gossip.GossipPlan`'s ``degree`` is the number of
+  node-axis collective-permutes per step, so bytes = degree * M * (wire/32)
+  and latency = degree rounds.  The default (no plan) is the paper's ring:
+  degree 2, bytes = 2 * M * (wire_bits/32) — bit-identical to the historical
+  hardcoded-ring figures.  A torus plan charges 4 rounds/payloads.
 * Compressed decentralized (DCD/ECD): same round structure, payload shrunk by
   the wire ratio — which is taken from the *real* payload containers, not a
   formula: int8 codes + per-block scales ~ 8.03/32 at 8 bits, bit-packed uint32
   words ~ 4.03/32 at 4 bits, and fp32/fp16 values + bit-packed indices for the
-  sparsifiers (see ``strategies_for``, which asks the compressor for its
-  measured wire bits/element).  Every registry compressor measures its figure
-  from payload nbytes — there is no modeled wire format left to flag.
+  sparsifiers (see ``strategies_for``, which asks the compressor — or the wire
+  format directly — for its measured wire bits/element).  Every wire format
+  measures its figure from payload nbytes — there is no modeled figure left.
 
 comm_time = latency * rounds + bytes / bandwidth ;  iter_time = compute + comm.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,26 +47,37 @@ class CommStrategy:
 
 
 def strategies(model_bytes: float, n: int,
-               wire_bits: float = 8.03) -> Dict[str, CommStrategy]:
+               wire_bits: float = 8.03, degree: int = 2) -> Dict[str, CommStrategy]:
+    """``degree``: gossip payload rounds per iteration — the plan's number of
+    node-axis shifts (ring 2, circulant torus 4).  Both the bytes through each
+    NIC and the latency-bound rounds scale with it; the AllReduce baselines
+    are degree-independent."""
     M = model_bytes
     return {
         "allreduce": CommStrategy("allreduce", 2 * (n - 1) / n * M, 2 * (n - 1)),
-        "decentralized_fp": CommStrategy("decentralized_fp", 2 * M, 2),
-        "decentralized_lp": CommStrategy("decentralized_lp", 2 * M * wire_bits / 32, 2),
+        "decentralized_fp": CommStrategy("decentralized_fp", degree * M, degree),
+        "decentralized_lp": CommStrategy("decentralized_lp",
+                                         degree * M * wire_bits / 32, degree),
         # naive centralized quantized (for completeness; paper omits it)
         "allreduce_lp": CommStrategy("allreduce_lp", 2 * (n - 1) / n * M * wire_bits / 32,
                                      2 * (n - 1)),
     }
 
 
-def strategies_for(model_bytes: float, n: int, compressor) -> Dict[str, CommStrategy]:
-    """Strategies whose low-precision wire bits come from the compressor's
-    actual payload containers: ``wire_bits_per_element`` is payload-derived
-    for every registry compressor — bit-stream-packed uint32 words at 2..7
-    bits, int8 at 8, and fp32/fp16 values + packed uint index words for the
-    fixed-capacity sparsifiers."""
+def strategies_for(model_bytes: float, n: int, wire,
+                   plan: Optional[object] = None) -> Dict[str, CommStrategy]:
+    """Strategies whose low-precision wire bits come from the actual payload
+    containers: ``wire`` is anything with a measured ``wire_bits_per_element``
+    — a :class:`~repro.distributed.wire.WireFormat` or a compressor view —
+    (bit-stream-packed uint32 words at 2..7 bits, int8 at 8, fp32/fp16 values
+    + packed uint index words for the fixed-capacity sparsifiers).  ``plan``
+    (a :class:`~repro.distributed.gossip.GossipPlan`) sets the gossip degree:
+    latency rounds and payload exchanges both follow ``plan.degree`` (ring=2,
+    matching the historical default bit for bit; circulant torus=4)."""
+    degree = 2 if plan is None else int(plan.degree)
     return strategies(model_bytes, n,
-                      wire_bits=float(compressor.wire_bits_per_element()))
+                      wire_bits=float(wire.wire_bits_per_element()),
+                      degree=degree)
 
 
 def comm_time(s: CommStrategy, net: NetworkCondition) -> float:

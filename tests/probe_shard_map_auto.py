@@ -30,14 +30,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.distributed.decentralized import WireCodec, _make_decode_axpy
+from repro.distributed.decentralized import _make_decode_axpy
+from repro.distributed.wire import QuantWire
 
 mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("node", "fsdp", "model"))
-codec = WireCodec(bits=4, block=128)
+codec = QuantWire(bits=4, block=128)
 dec = _make_decode_axpy(codec, mesh)
 assert dec is not None, "REPRO_SHARD_MAP_AUTO was not honored"
 tree = {"w": jax.random.normal(jax.random.key(0), (2, 8, 512))}
-tdef, payloads = codec.encode(tree, jnp.asarray(0, jnp.int32), salt=1)
+tdef, payloads = codec.encode_tree(tree, jnp.asarray(0, jnp.int32), salt=1)
 acc = jax.tree.map(jnp.zeros_like, tree)
 with mesh:
     out = jax.jit(lambda pls, a: dec(tdef, pls, a, 1.0))(payloads, acc)

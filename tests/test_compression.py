@@ -82,7 +82,7 @@ def test_quantizer_wire_format_is_small():
 def test_wire_bits_model_equals_measured(bits, use_kernel):
     """wire_bits_per_element must equal 8 * payload_nbytes / n for the actual
     compressed payload — the cost model may not lie about sub-byte configs."""
-    from repro.core.compression import payload_nbytes
+    from repro.kernels.ops import payload_nbytes
 
     comp = RandomQuantizer(bits=bits, block_size=1024, use_kernel=use_kernel)
     n = 4096
@@ -159,10 +159,40 @@ def test_tree_apply_independent_keys():
 
 
 def test_registry():
-    assert make_compressor("quant", bits=4).bits == 4
-    assert make_compressor("identity").name == "identity"
-    assert make_compressor("sparsify", p=0.5).p == 0.5
-    assert make_compressor("topk", p=0.5).mode == "topk"
+    """Deprecated spelling: make_compressor warns but still resolves the old
+    registry names to the new wire-view objects (back-compat shim)."""
+    with pytest.warns(DeprecationWarning):
+        assert make_compressor("quant", bits=4).bits == 4
+    with pytest.warns(DeprecationWarning):
+        assert make_compressor("identity").name == "identity"
+    with pytest.warns(DeprecationWarning):
+        assert make_compressor("sparsify", p=0.5).p == 0.5
+    with pytest.warns(DeprecationWarning):
+        assert make_compressor("topk", p=0.5).mode == "topk"
+
+
+def test_compressors_are_views_over_wire_formats():
+    """The unification invariant: every operator IS a thin view over the
+    shared WireFormat object (Compressor.wire), and compressor_for round-trips
+    wire -> view -> wire."""
+    from repro.core.compression import compressor_for
+    from repro.distributed.wire import QuantWire, SparseWire, make_wire_format
+
+    q = RandomQuantizer(bits=3, block_size=1024)
+    assert q.wire == QuantWire(bits=3, block=1024)
+    t = TopKSparsifier(p=0.5, block_size=128)
+    assert t.wire == SparseWire(p=0.5, block=128, mode="topk")
+    for spec in ("quant:4", "sparse:0.25:topk", "fp16", "identity"):
+        comp = compressor_for(make_wire_format(spec), salt=7)
+        assert comp.wire == make_wire_format(spec)
+        assert comp.salt == 7
+    # one implementation path: the view's compress == the wire's encode for
+    # the same derived seed
+    z = jax.random.normal(jax.random.key(0), (512,))
+    key = jax.random.key(3)
+    pv = q.compress(key, z)
+    pw = q.wire.encode(z, jax.random.bits(key, (1,), jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(pv["codes"]), np.asarray(pw["codes"]))
 
 
 def test_registry_wire_honesty():
@@ -177,11 +207,10 @@ def test_registry_wire_honesty():
     n = 4096
     for name in REGISTRY:
         kwargs = {"bits": 5, "block_size": 1024} if name == "quant" else {}
-        comp = make_compressor(name, **kwargs)
+        comp = REGISTRY[name](**kwargs)
         payload = jax.eval_shape(comp.compress, jax.random.key(0),
                                  jax.ShapeDtypeStruct((n,), jnp.float32))
         measured = 8.0 * payload_nbytes(payload) / n
-        assert not comp.wire_is_modeled, f"unexpected modeled compressor {name}"
         assert comp.wire_bits_per_element((n,)) == pytest.approx(measured), name
         if name in ("sparsify", "topk"):
             # really sparse in memory too: far below the dense 32 bits/element

@@ -18,12 +18,9 @@ import numpy as np
 import pytest
 
 from repro.core.testbed import make_problem
-from repro.distributed.decentralized import (
-    SparseWireCodec,
-    WireCodec,
-    init_dist_state,
-    make_dist_train_step,
-)
+from repro.distributed.decentralized import init_dist_state, make_dist_train_step
+from repro.distributed.gossip import make_gossip_plan
+from repro.distributed.wire import QuantWire, SparseWire
 from repro.optim import sgd
 from repro.optim.schedules import constant
 
@@ -58,7 +55,7 @@ def _toy_batch(key, n, m=16, d=8):
 def test_dist_dcd_replica_invariant():
     """After every DCD step, rep_l == roll(X, +1) and rep_r == roll(X, -1)."""
     n, d = 8, 8
-    step = make_dist_train_step(_toy_loss, "dcd", sgd(), WireCodec(bits=8, block=128),
+    step = make_dist_train_step(_toy_loss, "dcd", sgd(), QuantWire(bits=8, block=128),
                                 n, constant(0.05))
     state = init_dist_state("dcd", jnp.zeros((d,)), n, sgd())
     for t in range(5):
@@ -114,7 +111,7 @@ def test_dist_dcd_converges_on_quadratic():
     x_true = jnp.ones((d,))
     b = jnp.einsum("nmd,d->nm", A, x_true)
     batch = {"A": A, "b": b}
-    step = make_dist_train_step(_toy_loss, "dcd", sgd(), WireCodec(bits=8, block=128),
+    step = make_dist_train_step(_toy_loss, "dcd", sgd(), QuantWire(bits=8, block=128),
                                 n, constant(0.1))
     state = init_dist_state("dcd", jnp.zeros((d,)), n, sgd())
     jstep = jax.jit(step)
@@ -128,14 +125,14 @@ def test_dist_dcd_converges_on_quadratic():
 
 
 def test_wire_codec_roundtrip_and_format():
-    codec = WireCodec(bits=8, block=128)
+    codec = QuantWire(bits=8, block=128)
     tree = {"w": jax.random.normal(jax.random.key(0), (4, 33, 7)),
             "b": jax.random.normal(jax.random.key(1), (4, 5))}
-    tdef, payload = codec.encode(tree, jnp.asarray(3, jnp.int32), salt=1)
+    tdef, payload = codec.encode_tree(tree, jnp.asarray(3, jnp.int32), salt=1)
     for p in payload:
         assert p["codes"].dtype == jnp.int8
         assert p["codes"].shape[0] == 4          # node axis preserved
-    out = codec.decode(tdef, payload, tree)
+    out = codec.decode_tree(tdef, payload, tree)
     err = max(float(jnp.max(jnp.abs(a - b)))
               for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)))
     assert err < 0.1   # within one 8-bit bin of the per-block scale
@@ -146,8 +143,8 @@ def test_wire_codec_roundtrip_and_format():
 @pytest.mark.skipif(len(jax.devices()) < 8,
                     reason="needs 8 devices (CI multidevice job forces "
                            "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
-@pytest.mark.parametrize("codec", [WireCodec(bits=3, block=128),
-                                   SparseWireCodec(p=0.25, block=128)],
+@pytest.mark.parametrize("codec", [QuantWire(bits=3, block=128),
+                                   SparseWire(p=0.25, block=128)],
                          ids=["quant3", "sparse25"])
 @pytest.mark.parametrize("algo", ["dcd", "ecd"])
 def test_sharded_gossip_decode_matches_inline(algo, codec):
@@ -186,8 +183,8 @@ def test_gossip_lowering_uses_collective_permute_for_int8():
     out = run_subprocess("""
         import jax, jax.numpy as jnp
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-        from repro.distributed.decentralized import (WireCodec, init_dist_state,
-                                                     make_dist_train_step)
+        from repro.distributed.decentralized import init_dist_state, make_dist_train_step
+        from repro.distributed.wire import QuantWire
         from repro.optim import sgd
         from repro.optim.schedules import constant
         import numpy as np
@@ -197,7 +194,7 @@ def test_gossip_lowering_uses_collective_permute_for_int8():
         def loss(p, b):
             l = 0.5 * jnp.mean((b["A"] @ p - b["b"]) ** 2)
             return l, {"xent": l}
-        step = make_dist_train_step(loss, "dcd", sgd(), WireCodec(bits=8, block=128),
+        step = make_dist_train_step(loss, "dcd", sgd(), QuantWire(bits=8, block=128),
                                     n, constant(0.05))
         state = init_dist_state("dcd", jnp.zeros((d,)), n, sgd())
         batch = {"A": jnp.ones((n, 4, d)), "b": jnp.ones((n, 4))}
@@ -216,7 +213,7 @@ def test_gossip_lowering_uses_collective_permute_for_int8():
         # (asserted via jaxpr), including the odd 3-bit stream layout.
         for bits in (4, 3):
             stepb = make_dist_train_step(loss, "dcd", sgd(),
-                                         WireCodec(bits=bits, block=128),
+                                         QuantWire(bits=bits, block=128),
                                          n, constant(0.05), mesh=mesh)
             jx = str(jax.make_jaxpr(stepb)(state, batch))
             assert "_unpack_dequant_axpy_kernel" in jx, bits
@@ -233,9 +230,9 @@ def test_gossip_lowering_uses_collective_permute_for_int8():
         # containers — k fp32 values + packed uint32 index words — never the
         # dense (8, 1024) fp32 leaf; the fused scatter kernel decodes under
         # shard_map exactly like the quantized path.
-        from repro.distributed.decentralized import SparseWireCodec
+        from repro.distributed.wire import SparseWire
         steps_ = make_dist_train_step(loss, "dcd", sgd(),
-                                      SparseWireCodec(p=0.25, block=128),
+                                      SparseWire(p=0.25, block=128),
                                       n, constant(0.05), mesh=mesh)
         jxs = str(jax.make_jaxpr(steps_)(state, batch))
         assert "_sparse_scatter_axpy_kernel" in jxs
@@ -259,8 +256,8 @@ def test_dryrun_smoke_tiny_mesh():
         from repro.configs import get_config
         from repro.launch.mesh import derive_train_mesh
         from repro.launch.specs import InputShape, train_input_specs, params_specs
-        from repro.distributed.decentralized import (WireCodec, init_dist_state,
-                                                     make_dist_train_step)
+        from repro.distributed.decentralized import init_dist_state, make_dist_train_step
+        from repro.distributed.wire import QuantWire
         from repro.distributed.sharding import batch_shardings, params_shardings
         from repro.launch import analysis
         from repro.optim import sgd
@@ -270,11 +267,12 @@ def test_dryrun_smoke_tiny_mesh():
         cfg = get_config("granite-3-2b").reduced()
         mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("node", "fsdp", "model"))
         n = 2
+        from repro.distributed.wire import QuantWire
         from repro.models.api import build_model
         model = build_model(cfg)
         opt = sgd()
         step = make_dist_train_step(lambda p, b: model.loss(p, b, remat=True),
-                                    "dcd", opt, WireCodec(bits=8, block=128), n,
+                                    "dcd", opt, QuantWire(bits=8, block=128), n,
                                     constant(1e-2))
         p_sds = params_specs(cfg)
         state_sds = jax.eval_shape(lambda ps: init_dist_state("dcd", ps, n, opt), p_sds)
@@ -324,15 +322,15 @@ def test_analysis_shape_bytes():
 
 def test_wire_codec_int4_packing_halves_bytes():
     """Packed 4-bit wire: 8 codes per uint32 word, roundtrip within one bin."""
-    c8 = WireCodec(bits=8, block=128)
-    c4 = WireCodec(bits=4, block=128)
+    c8 = QuantWire(bits=8, block=128)
+    c4 = QuantWire(bits=4, block=128)
     assert not c8.packed and c4.packed
     tree = {"w": jax.random.normal(jax.random.key(0), (2, 64, 256))}
-    _, p8 = c8.encode(tree, jnp.asarray(1, jnp.int32), salt=0)
-    tdef, p4 = c4.encode(tree, jnp.asarray(1, jnp.int32), salt=0)
+    _, p8 = c8.encode_tree(tree, jnp.asarray(1, jnp.int32), salt=0)
+    tdef, p4 = c4.encode_tree(tree, jnp.asarray(1, jnp.int32), salt=0)
     assert p4[0]["codes"].dtype == jnp.uint32
     assert p4[0]["codes"].nbytes * 2 == p8[0]["codes"].nbytes
-    out = c4.decode(tdef, p4, tree)
+    out = c4.decode_tree(tdef, p4, tree)
     scale = float(jnp.max(jnp.abs(tree["w"])))
     assert float(jnp.max(jnp.abs(out["w"] - tree["w"]))) <= scale / 7 * 1.05
     assert c4.wire_bits_per_element() < 0.6 * c8.wire_bits_per_element()
@@ -341,19 +339,19 @@ def test_wire_codec_int4_packing_halves_bytes():
 def test_wire_codec_packed_measured_bits_per_element():
     """Acceptance: bits=4, block=1024 — the stacked payload the ring step rolls
     ships <= 4.1 bits/element, measured from the payload containers."""
-    codec = WireCodec(bits=4, block=1024)
+    codec = QuantWire(bits=4, block=1024)
     tree = {"w": jnp.zeros((8, 64, 4096)), "b": jnp.zeros((8, 2048))}
     n_elem = sum(l.size for l in jax.tree.leaves(tree))
-    tdef, payload = codec.encode(tree, jnp.asarray(0, jnp.int32), salt=0)
+    tdef, payload = codec.encode_tree(tree, jnp.asarray(0, jnp.int32), salt=0)
     measured = 8.0 * sum(p["codes"].nbytes + p["scale"].nbytes for p in payload) / n_elem
     assert measured <= 4.1
     # the shape-only accounting used by the dryrun must agree exactly
-    assert codec.payload_nbytes(tree) == \
+    assert codec.wire_nbytes(tree) == \
         sum(p["codes"].nbytes + p["scale"].nbytes for p in payload)
     assert codec.wire_bits_per_element() == pytest.approx(4.03125)
     # 2-bit packs 16 codes/word
-    c2 = WireCodec(bits=2, block=1024)
-    assert 8.0 * c2.payload_nbytes(tree) / n_elem <= 2.1
+    c2 = QuantWire(bits=2, block=1024)
+    assert 8.0 * c2.wire_nbytes(tree) / n_elem <= 2.1
 
 
 @pytest.mark.parametrize("algo", ["dcd", "ecd"])
@@ -363,15 +361,15 @@ def test_packed_codec_steps_match_unpacked(algo):
     to float rounding (XLA fuses the two programs differently, so bit-equality
     of the *trajectory* is not guaranteed — the codes are, asserted first)."""
     n, d = 8, 8
-    cp, cu = WireCodec(bits=4, block=128), WireCodec(bits=4, block=128, pack=False)
+    cp, cu = QuantWire(bits=4, block=128), QuantWire(bits=4, block=128, pack=False)
     tree = {"w": jax.random.normal(jax.random.key(0), (n, 40))}
-    tdp, pp = cp.encode(tree, jnp.asarray(2, jnp.int32), salt=3)
-    tdu, pu = cu.encode(tree, jnp.asarray(2, jnp.int32), salt=3)
+    tdp, pp = cp.encode_tree(tree, jnp.asarray(2, jnp.int32), salt=3)
+    tdu, pu = cu.encode_tree(tree, jnp.asarray(2, jnp.int32), salt=3)
     from repro.kernels.ref import unpack_codes
     np.testing.assert_array_equal(
         np.asarray(unpack_codes(pp[0]["codes"], bits=4)), np.asarray(pu[0]["codes"]))
-    np.testing.assert_array_equal(np.asarray(cp.decode(tdp, pp, tree)["w"]),
-                                  np.asarray(cu.decode(tdu, pu, tree)["w"]))
+    np.testing.assert_array_equal(np.asarray(cp.decode_tree(tdp, pp, tree)["w"]),
+                                  np.asarray(cu.decode_tree(tdu, pu, tree)["w"]))
 
     sp = make_dist_train_step(_toy_loss, algo, sgd(), cp, n, constant(0.05))
     su = make_dist_train_step(_toy_loss, algo, sgd(), cu, n, constant(0.05))
@@ -395,7 +393,7 @@ def test_dist_dcd_converges_packed_4bit():
     x_true = jnp.ones((d,))
     b = jnp.einsum("nmd,d->nm", A, x_true)
     batch = {"A": A, "b": b}
-    step = make_dist_train_step(_toy_loss, "dcd", sgd(), WireCodec(bits=4, block=128),
+    step = make_dist_train_step(_toy_loss, "dcd", sgd(), QuantWire(bits=4, block=128),
                                 n, constant(0.1))
     state = init_dist_state("dcd", jnp.zeros((d,)), n, sgd())
     jstep = jax.jit(step)
@@ -411,21 +409,23 @@ def test_dist_dcd_converges_packed_4bit():
 # ------------------------------------------------- differential test tier
 #
 # The sharded DCD/ECD runtime must agree *numerically* with the stacked
-# semantic reference in core/algorithms.py.  The WireCompressor adapter feeds
-# the reference steps the same deterministic PCG quantization (seeded by
-# step/salt/leaf), so the two runs produce bit-identical codes and the
-# trajectories match to float rounding — for every wire width, odd 3/5-bit
-# stream packing included.
+# semantic reference in core/algorithms.py.  The compressor view of the SAME
+# wire object (compressor_for) feeds the reference steps the same
+# deterministic PCG compression (seeded by step/salt/leaf), so the two runs
+# produce bit-identical payloads and the trajectories match to float rounding
+# — for every wire width (odd 3/5-bit stream packing included), for the
+# sparse value+index format, and for every circulant-representable topology
+# plan ({chain, torus} x {quant 4-bit, sparse p=0.25} below).
 
 @pytest.mark.parametrize("algo", ["dcd", "ecd"])
 @pytest.mark.parametrize("bits", [2, 3, 4, 5, 8])
 def test_dist_step_matches_stacked_reference(algo, bits):
     from repro.core import make_algorithm
-    from repro.distributed.decentralized import WireCompressor
+    from repro.core.compression import compressor_for
 
     n, d = 8, 256   # d >= 128 so the packed widths exercise the fused kernel
-    codec = WireCodec(bits=bits, block=128)
-    comp = WireCompressor(codec, salt=2 if algo == "dcd" else 3)
+    codec = QuantWire(bits=bits, block=128)
+    comp = compressor_for(codec, salt=2 if algo == "dcd" else 3)
     core = make_algorithm(algo, n, "ring", compressor=comp)
     core_step = jax.jit(core.step_fn())   # jit: the eager PCG encode dominates
     # align the reference's step counter with the runtime's 0-based counter
@@ -441,7 +441,7 @@ def test_dist_step_matches_stacked_reference(algo, bits):
         grads = jax.vmap(lambda p, A, b: jax.grad(
             lambda q: 0.5 * jnp.mean((A @ q - b) ** 2))(p))(
             core_state.params, batch["A"], batch["b"])
-        # the adapter reads the key slot as the step counter for seed derivation
+        # the view reads the key slot as the step counter for seed derivation
         core_state = core_step(core_state, grads, jnp.asarray(t), jnp.float32(0.05))
         dist_state, _ = dist_step(dist_state, batch)
         np.testing.assert_allclose(np.asarray(dist_state.params),
@@ -456,12 +456,12 @@ def test_dist_step_matches_stacked_reference_sparse(algo, p):
     bit-identical packed index words between the two runs (asserted on the
     encoded payload the reference derives from the same step/salt seeds)."""
     from repro.core import make_algorithm
-    from repro.distributed.decentralized import WireCompressor
+    from repro.core.compression import compressor_for
 
     n, d = 8, 256   # d >= 128: blocks meet the fused kernel's lane contract
     salt = 2 if algo == "dcd" else 3
-    codec = SparseWireCodec(p=p, block=128, mode="randk")
-    comp = WireCompressor(codec, salt=salt)
+    codec = SparseWire(p=p, block=128, mode="randk")
+    comp = compressor_for(codec, salt=salt)
     core = make_algorithm(algo, n, "ring", compressor=comp)
     core_step = jax.jit(core.step_fn())
     core_state = core.init(jnp.zeros((d,)))._replace(step=jnp.asarray(0, jnp.int32))
@@ -481,8 +481,8 @@ def test_dist_step_matches_stacked_reference_sparse(algo, p):
                                    np.asarray(core_state.params), atol=1e-5)
         # indices bit-for-bit: both runs encode the same tree with the same
         # (step, salt, leaf) seeds — jit and eager must agree word for word
-        _, pe = codec.encode(dist_state.params, jnp.asarray(t, jnp.int32), salt=salt)
-        pj = jax.jit(lambda tr, s: codec.encode(tr, s, salt=salt)[1])(
+        _, pe = codec.encode_tree(dist_state.params, jnp.asarray(t, jnp.int32), salt=salt)
+        pj = jax.jit(lambda tr, s: codec.encode_tree(tr, s, salt=salt)[1])(
             dist_state.params, jnp.asarray(t, jnp.int32))
         np.testing.assert_array_equal(np.asarray(pe[0]["idx"]),
                                       np.asarray(pj[0]["idx"]))
@@ -495,7 +495,7 @@ def test_dist_step_uses_fused_sparse_kernel(mode):
     the 128-lane kernel contract stay on the jnp reference path."""
     n, d = 8, 256
     step = make_dist_train_step(_toy_loss, "dcd", sgd(),
-                                SparseWireCodec(p=0.25, block=128, mode=mode),
+                                SparseWire(p=0.25, block=128, mode=mode),
                                 n, constant(0.05))
     state = init_dist_state("dcd", jnp.zeros((d,)), n, sgd())
     batch = _toy_batch(jax.random.key(0), n, d=d)
@@ -517,7 +517,7 @@ def test_dist_dcd_converges_sparse_topk():
     b = jnp.einsum("nmd,d->nm", A, x_true)
     batch = {"A": A, "b": b}
     step = make_dist_train_step(_toy_loss, "dcd", sgd(),
-                                SparseWireCodec(p=0.5, block=128, mode="topk"),
+                                SparseWire(p=0.5, block=128, mode="topk"),
                                 n, constant(0.1))
     state = init_dist_state("dcd", jnp.zeros((d,)), n, sgd())
     jstep = jax.jit(step)
@@ -538,7 +538,7 @@ def test_dist_step_uses_fused_axpy_kernel(algo):
     leaves below the 128-lane kernel contract also stay on the jnp path."""
     n, d = 8, 256   # d >= 128: the leaf's block meets the kernel lane contract
     step = make_dist_train_step(_toy_loss, algo, sgd(),
-                                WireCodec(bits=3, block=128), n, constant(0.05))
+                                QuantWire(bits=3, block=128), n, constant(0.05))
     state = init_dist_state(algo, jnp.zeros((d,)), n, sgd())
     batch = _toy_batch(jax.random.key(0), n, d=d)
     txt = str(jax.make_jaxpr(step)(state, batch))
@@ -548,7 +548,7 @@ def test_dist_step_uses_fused_axpy_kernel(algo):
     assert n_calls >= 3
 
     step8 = make_dist_train_step(_toy_loss, algo, sgd(),
-                                 WireCodec(bits=8, block=128), n, constant(0.05))
+                                 QuantWire(bits=8, block=128), n, constant(0.05))
     txt8 = str(jax.make_jaxpr(step8)(state, batch))
     assert "_unpack_dequant_axpy_kernel" not in txt8
 
@@ -561,26 +561,26 @@ def test_dist_step_uses_fused_axpy_kernel(algo):
 def test_wire_codec_3bit_measured_bits_per_element():
     """Acceptance: bits=3, block=1024 — the stacked payload the ring step rolls
     ships <= 3.2 wire bits/element, measured from real payload nbytes."""
-    codec = WireCodec(bits=3, block=1024)
+    codec = QuantWire(bits=3, block=1024)
     tree = {"w": jnp.zeros((8, 64, 4096)), "b": jnp.zeros((8, 2048))}
     n_elem = sum(l.size for l in jax.tree.leaves(tree))
-    tdef, payload = codec.encode(tree, jnp.asarray(0, jnp.int32), salt=0)
+    tdef, payload = codec.encode_tree(tree, jnp.asarray(0, jnp.int32), salt=0)
     measured = 8.0 * sum(p["codes"].nbytes + p["scale"].nbytes for p in payload) / n_elem
     assert measured <= 3.2
-    assert codec.payload_nbytes(tree) == \
+    assert codec.wire_nbytes(tree) == \
         sum(p["codes"].nbytes + p["scale"].nbytes for p in payload)
     assert codec.wire_bits_per_element() == pytest.approx(3.03125)
     # roundtrip within one 3-bit bin (levels = 3)
     tree2 = {"w": jax.random.normal(jax.random.key(0), (2, 16, 1024))}
-    tdef2, p2 = codec.encode(tree2, jnp.asarray(1, jnp.int32), salt=0)
-    out = codec.decode(tdef2, p2, tree2)
+    tdef2, p2 = codec.encode_tree(tree2, jnp.asarray(1, jnp.int32), salt=0)
+    out = codec.decode_tree(tdef2, p2, tree2)
     scale = float(jnp.max(jnp.abs(tree2["w"])))
     assert float(jnp.max(jnp.abs(out["w"] - tree2["w"]))) <= scale / 3 * 1.05
 
 
 def test_quantize_nd_preserves_leading_dims():
     """Shard-local blocking: codes keep the leaf's leading dims intact."""
-    from repro.distributed.decentralized import _dequantize_nd, _quantize_nd
+    from repro.distributed.wire import _dequantize_nd, _quantize_nd
 
     x = jax.random.normal(jax.random.key(0), (3, 5, 300))
     codes, scale = _quantize_nd(x, jnp.uint32(7), bits=8, block=128)
@@ -593,7 +593,7 @@ def test_quantize_nd_preserves_leading_dims():
 
 
 def test_quantize_nd_unbiased():
-    from repro.distributed.decentralized import _dequantize_nd, _quantize_nd
+    from repro.distributed.wire import _dequantize_nd, _quantize_nd
 
     x = jax.random.normal(jax.random.key(1), (1, 512))
     acc = jnp.zeros_like(x)
@@ -606,16 +606,14 @@ def test_quantize_nd_unbiased():
     assert float(jnp.max(jnp.abs(acc / n - x))) < 3 * tol
 
 
-def test_torus_gossip_shifts():
-    from repro.distributed.decentralized import gossip_shifts
-
-    w_s, shifts = gossip_shifts("torus", 16)          # 4x4 torus
-    assert w_s == pytest.approx(0.2)
-    assert set(shifts) == {1, -1, 4, -4}
-    assert w_s + sum(shifts.values()) == pytest.approx(1.0)
+def test_torus_gossip_plan():
+    plan = make_gossip_plan("torus", 16)              # 4x4 circulant torus
+    assert plan.self_weight == pytest.approx(0.2)
+    assert set(plan.shift_list) == {1, -1, 4, -4}
+    assert plan.uniform and plan.degree == 4
+    assert plan.self_weight + sum(w for _, w in plan.shifts) == pytest.approx(1.0)
     # small n falls back to the ring
-    _, s2 = gossip_shifts("torus", 4)
-    assert set(s2) == {1, -1}
+    assert set(make_gossip_plan("torus", 4).shift_list) == {1, -1}
 
 
 def test_torus_dpsgd_matches_core_simulator():
@@ -634,9 +632,11 @@ def test_torus_dpsgd_matches_core_simulator():
     core_step = algo.step_fn()
     core_state = algo.init(jnp.zeros((d,)))
 
-    dist_step = make_dist_train_step(_toy_loss, "dpsgd", sgd(), None, n,
-                                     constant(0.05), topology="torus")
-    dist_state = init_dist_state("dpsgd", jnp.zeros((d,)), n, sgd(), topology="torus")
+    plan = make_gossip_plan("torus", n)
+    np.testing.assert_allclose(plan.mixing_matrix(), W, atol=1e-12)
+    dist_step = make_dist_train_step(_toy_loss, "dpsgd", sgd(), None, plan,
+                                     constant(0.05))
+    dist_state = init_dist_state("dpsgd", jnp.zeros((d,)), plan, sgd())
 
     for t in range(5):
         batch = _toy_batch(jax.random.key(t), n)
@@ -656,10 +656,11 @@ def test_torus_dcd_replica_invariants_and_convergence():
     A = jax.random.normal(key, (n, 64, d))
     b = jnp.einsum("nmd,d->nm", A, jnp.ones((d,)))
     batch = {"A": A, "b": b}
+    plan = make_gossip_plan("torus", n)
     step = jax.jit(make_dist_train_step(_toy_loss, "dcd", sgd(),
-                                        WireCodec(bits=8, block=128), n,
-                                        constant(0.1), topology="torus"))
-    state = init_dist_state("dcd", jnp.zeros((d,)), n, sgd(), topology="torus")
+                                        QuantWire(bits=8, block=128), plan,
+                                        constant(0.1)))
+    state = init_dist_state("dcd", jnp.zeros((d,)), plan, sgd())
     first = None
     for t in range(120):
         state, m = step(state, batch)
@@ -669,3 +670,129 @@ def test_torus_dcd_replica_invariants_and_convergence():
             np.asarray(state.aux[f"rep{k:+d}"]),
             np.roll(np.asarray(state.params), k, axis=0), rtol=1e-5)
     assert float(m["loss"]) < 0.05 * first
+
+
+# ------------------------------------------- plan-compiled topologies (tier)
+#
+# Acceptance for the GossipPlan redesign: the sharded runtime on a compiled
+# plan must match the stacked reference running the plan's OWN mixing matrix,
+# for non-trivial topologies — chain (banded, per-node masked weights) and the
+# circulant torus (4 uniform shifts) — across both wire formats.
+
+def _plan_wire(case):
+    return {"quant4": QuantWire(bits=4, block=128),
+            "sparse25": SparseWire(p=0.25, block=128)}[case]
+
+
+@pytest.mark.parametrize("topo_name", ["chain", "torus"])
+@pytest.mark.parametrize("wire_case", ["quant4", "sparse25"])
+@pytest.mark.parametrize("algo", ["dcd", "ecd"])
+def test_dist_step_matches_stacked_reference_on_plan(topo_name, wire_case, algo):
+    """Sharded DCD/ECD on a compiled GossipPlan == stacked core/algorithms
+    reference with W = plan.mixing_matrix() (atol 1e-5), for
+    {chain, torus} x {quant 4-bit, sparse p=0.25} — and the wire words both
+    runs put on the permute are bit-identical (same wire object, same
+    (step, salt, leaf) seeds; asserted eager vs jit on the same tree)."""
+    from repro.core.algorithms import Algorithm
+    from repro.core.compression import compressor_for
+
+    n, d = 16, 256
+    plan = make_gossip_plan(topo_name, n)
+    wire = _plan_wire(wire_case)
+    salt = 2 if algo == "dcd" else 3
+    comp = compressor_for(wire, salt=salt)
+    assert comp.wire == wire              # one object, one implementation path
+    core = Algorithm(name=algo, W=plan.mixing_matrix(), compressor=comp)
+    core_step = jax.jit(core.step_fn())
+    core_state = core.init(jnp.zeros((d,)))._replace(step=jnp.asarray(0, jnp.int32))
+
+    dist_step = jax.jit(make_dist_train_step(
+        _toy_loss, algo, sgd(), wire, plan, constant(0.05)))
+    dist_state = init_dist_state(algo, jnp.zeros((d,)), plan, sgd())
+
+    for t in range(3):
+        batch = _toy_batch(jax.random.key(t), n, d=d)
+        grads = jax.vmap(lambda p_, A, b: jax.grad(
+            lambda q: 0.5 * jnp.mean((A @ q - b) ** 2))(p_))(
+            core_state.params, batch["A"], batch["b"])
+        core_state = core_step(core_state, grads, jnp.asarray(t), jnp.float32(0.05))
+        dist_state, _ = dist_step(dist_state, batch)
+        np.testing.assert_allclose(np.asarray(dist_state.params),
+                                   np.asarray(core_state.params), atol=1e-5)
+    # wire words bit-for-bit: the runtime and the reference encode through the
+    # SAME wire object with the same seeds — jit and eager must agree word for
+    # word on the packed containers (codes or idx)
+    key = "codes" if wire_case == "quant4" else "idx"
+    _, pe = wire.encode_tree(dist_state.params, jnp.asarray(2, jnp.int32), salt)
+    pj = jax.jit(lambda tr, st: wire.encode_tree(tr, st, salt)[1])(
+        dist_state.params, jnp.asarray(2, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(pe[0][key]), np.asarray(pj[0][key]))
+
+
+def test_chain_dcd_replica_invariant_and_endpoint_weights():
+    """DCD on a chain plan: replicas still track roll(X, +-1) globally, and the
+    plan's masked weight vectors zero the wrap-around edges (endpoints have
+    one neighbor)."""
+    n, d = 8, 16
+    plan = make_gossip_plan("chain", n)
+    assert not plan.uniform and plan.degree == 2
+    w_plus = dict(plan.shifts)[1]
+    assert w_plus[0] == 0.0               # node 0 has no left neighbor
+    step = jax.jit(make_dist_train_step(_toy_loss, "dcd", sgd(),
+                                        QuantWire(bits=8, block=128), plan,
+                                        constant(0.05)))
+    state = init_dist_state("dcd", jnp.zeros((d,)), plan, sgd())
+    for t in range(4):
+        state, _ = step(state, _toy_batch(jax.random.key(t), n, d=d))
+    for s in (1, -1):
+        np.testing.assert_allclose(np.asarray(state.aux[f"rep{s:+d}"]),
+                                   np.roll(np.asarray(state.params), s, axis=0),
+                                   rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_plan_gossip_lowering_wire_payload_only():
+    """Acceptance HLO check for the plan redesign: on an 8-device node mesh,
+    every collective-permute the {chain, torus2d} x {quant4, sparse} step
+    emits moves only wire containers — uint32 packed words plus the tiny
+    per-block f32 scales/values — never the dense f32[8,1024] leaf.  The u32
+    words must be on the permute for every topology (the payload is identical
+    whatever the graph; only the shift set changes)."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.decentralized import init_dist_state, make_dist_train_step
+        from repro.distributed.gossip import make_gossip_plan
+        from repro.distributed.wire import QuantWire, SparseWire
+        from repro.optim import sgd
+        from repro.optim.schedules import constant
+
+        n, d = 8, 1024
+        mesh = jax.make_mesh((8,), ("node",))
+        def loss(p, b):
+            l = 0.5 * jnp.mean((b["A"] @ p - b["b"]) ** 2)
+            return l, {"xent": l}
+        batch = {"A": jnp.ones((n, 4, d)), "b": jnp.ones((n, 4))}
+        bsh = jax.tree.map(lambda l: NamedSharding(mesh, P("node")), batch)
+        for topo_name in ("chain", "torus2d"):
+            plan = make_gossip_plan(topo_name, n)
+            for wire in (QuantWire(bits=4, block=128), SparseWire(p=0.25, block=128)):
+                step = make_dist_train_step(loss, "dcd", sgd(), wire, plan,
+                                            constant(0.05), mesh=mesh)
+                state = init_dist_state("dcd", jnp.zeros((d,)), plan, sgd())
+                sh = jax.tree.map(
+                    lambda l: NamedSharding(mesh, P(*(("node",) + (None,)*(l.ndim-1))))
+                    if l.ndim else NamedSharding(mesh, P()), state)
+                with mesh:
+                    txt = jax.jit(step, in_shardings=(sh, bsh)).lower(
+                        state, batch).compile().as_text()
+                plines = [l for l in txt.splitlines() if "collective-permute" in l]
+                assert plines, (topo_name, wire)
+                assert any(" u32[" in l for l in plines), \\
+                    (topo_name, wire, "u32 words must ride the permute")
+                assert not any("f32[8,1024]" in l for l in plines), \\
+                    (topo_name, wire, "dense leaf must not be gossiped")
+                print("OK", topo_name, type(wire).__name__, len(plines))
+        print("ALL_OK")
+    """)
+    assert "ALL_OK" in out

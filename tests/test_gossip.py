@@ -1,0 +1,138 @@
+"""GossipPlan tests: mixing-matrix round-trips, spec factories, back-compat.
+
+The plan is the compiled form of a mixing matrix in the node-axis shift basis;
+``from_mixing_matrix`` must round-trip every circulant-representable topology
+in core/topology (weights match, SpectralInfo attached) and refuse dense W
+with a clear error.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import topology as topo
+from repro.distributed.gossip import GossipPlan, make_gossip_plan
+
+
+@pytest.mark.parametrize("name,n", [("ring", 8), ("ring", 16), ("ring", 2),
+                                    ("chain", 8), ("chain", 16),
+                                    ("torus", 16)])
+def test_plan_roundtrips_topology_matrices(name, n):
+    """Acceptance: from_mixing_matrix round-trips core.topology ring/chain
+    (and the circulant torus) — mixing_matrix() reproduces W exactly and the
+    SpectralInfo matches the matrix's own."""
+    W = topo.make_topology(name, n) if name != "torus" else \
+        make_gossip_plan("torus", n).mixing_matrix()
+    plan = GossipPlan.from_mixing_matrix(W, name=name)
+    np.testing.assert_allclose(plan.mixing_matrix(), W, atol=1e-12)
+    assert plan.spectral is not None
+    info = topo.spectral_info(W)
+    assert plan.spectral.rho == pytest.approx(info.rho)
+    assert plan.spectral.spectral_gap == pytest.approx(info.spectral_gap)
+
+
+def test_plan_roundtrips_true_2d_torus():
+    """The exact 2-D torus (core.topology torus2d) is banded but NOT strictly
+    circulant: 4 graph neighbors ride 6 shift diagonals (the row-wrap columns
+    get their own masked +-(c-1) shifts).  It still round-trips."""
+    W = topo.make_topology("torus", 16)          # 4x4
+    plan = GossipPlan.from_mixing_matrix(W, name="torus2d")
+    assert plan.degree == 6 and not plan.uniform
+    np.testing.assert_allclose(plan.mixing_matrix(), W, atol=1e-12)
+    # and the named factory gives the same plan
+    plan2 = make_gossip_plan("torus2d", 16)
+    np.testing.assert_allclose(plan2.mixing_matrix(), W, atol=1e-12)
+
+
+def test_plan_weights_match_matrix_entries():
+    """Shift-weight semantics: w_s[i] multiplies roll(X, s)[i] = X[i-s], so
+    the compiled weight for shift s is the W[i, (i-s) % n] diagonal."""
+    n = 8
+    W = topo.ring(n)
+    plan = GossipPlan.from_mixing_matrix(W)
+    assert plan.uniform and plan.self_weight == pytest.approx(1 / 3)
+    assert dict(plan.shifts)[1] == pytest.approx(W[1, 0])
+    chain = GossipPlan.from_mixing_matrix(topo.chain(n))
+    w_plus = dict(chain.shifts)[1]
+    np.testing.assert_allclose(w_plus, topo.chain(n)[np.arange(n),
+                                                     (np.arange(n) - 1) % n])
+    assert w_plus[0] == 0.0                      # no wrap edge on a chain
+
+
+def test_plan_rejects_non_circulant_dense_w():
+    """Acceptance: a clear error on W that is not circulant-representable
+    within the shift budget (star: n-1 diagonals)."""
+    with pytest.raises(ValueError, match="not circulant-representable"):
+        GossipPlan.from_mixing_matrix(topo.star(16))
+    # the named factory opts into the wide budget explicitly (exact but
+    # expensive: one collective-permute per shift)
+    star = make_gossip_plan("star", 16)
+    assert star.degree == 15
+    np.testing.assert_allclose(star.mixing_matrix(), topo.star(16), atol=1e-12)
+
+
+def test_plan_validates_mixing_matrix():
+    bad = np.eye(4) * 0.5        # rows don't sum to 1
+    with pytest.raises(AssertionError):
+        GossipPlan.from_mixing_matrix(bad)
+
+
+def test_make_gossip_plan_specs():
+    plan = make_gossip_plan("ring", 8)
+    assert make_gossip_plan(plan) is plan            # passthrough
+    w = make_gossip_plan("chain", 8).mixing_matrix()
+    from_w = make_gossip_plan(w)                     # matrix spec
+    np.testing.assert_allclose(from_w.mixing_matrix(), w, atol=1e-12)
+    with pytest.raises(ValueError, match="unknown gossip topology"):
+        make_gossip_plan("moebius", 8)
+    with pytest.raises(AssertionError):
+        make_gossip_plan("ring")                     # names need n
+
+
+def test_plan_degenerate_sizes():
+    assert make_gossip_plan("ring", 1).degree == 0
+    assert make_gossip_plan("torus", 4).shift_list == (-1, 1)   # ring fallback
+    p2 = make_gossip_plan("ring", 2)
+    assert p2.degree == 1 and p2.self_weight == pytest.approx(0.5)
+    np.testing.assert_allclose(p2.mixing_matrix(), topo.ring(2), atol=1e-12)
+
+
+# ------------------------------------------------------------ back-compat
+
+def test_deprecated_spellings_resolve_to_new_objects():
+    """Satellite acceptance: the old spellings still work, warn, and resolve
+    to the new objects — make_compressor names, topology= strings on the
+    runtime entry points, and the old codec class names."""
+    import jax.numpy as jnp
+
+    from repro.core.compression import RandomQuantizer, make_compressor
+    from repro.distributed import decentralized as dd
+    from repro.distributed.wire import QuantWire, SparseWire
+    from repro.optim import sgd
+    from repro.optim.schedules import constant
+
+    with pytest.warns(DeprecationWarning):
+        comp = make_compressor("quant", bits=4, block_size=128)
+    assert isinstance(comp, RandomQuantizer)
+    assert comp.wire == QuantWire(bits=4, block=128)
+
+    with pytest.warns(DeprecationWarning):
+        assert dd.WireCodec is QuantWire
+    with pytest.warns(DeprecationWarning):
+        assert dd.SparseWireCodec is SparseWire
+
+    with pytest.warns(DeprecationWarning):
+        w_s, shifts = dd.gossip_shifts("ring", 8)
+    assert w_s == pytest.approx(1 / 3) and set(shifts) == {1, -1}
+
+    def loss(p, b):
+        l = jnp.mean((b - p) ** 2)
+        return l, {}
+
+    with pytest.warns(DeprecationWarning):
+        state = dd.init_dist_state("dcd", jnp.zeros((16,)), 16, sgd(),
+                                   topology="torus")
+    assert set(state.aux) == {"rep+1", "rep-1", "rep+4", "rep-4"}
+    with pytest.warns(DeprecationWarning):
+        dd.make_dist_train_step(loss, "dcd", sgd(), QuantWire(bits=8, block=128),
+                                16, constant(0.05), topology="torus")

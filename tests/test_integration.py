@@ -10,10 +10,10 @@ from repro.configs import get_config
 from repro.core import RandomQuantizer, make_algorithm
 from repro.core.testbed import make_problem, run
 from repro.distributed.decentralized import (
-    WireCodec,
     init_dist_state,
     make_dist_train_step,
 )
+from repro.distributed.wire import QuantWire
 from repro.models.api import build_model
 from repro.optim import sgd
 from repro.optim.schedules import constant
@@ -39,7 +39,7 @@ def test_checkpoint_resume_is_bitexact(tmp_path):
     """
     n, d = 4, 16
     step = jax.jit(make_dist_train_step(_toy_loss, "dcd", sgd(),
-                                        WireCodec(bits=8, block=128), n,
+                                        QuantWire(bits=8, block=128), n,
                                         constant(0.05)))
     s_a = init_dist_state("dcd", jnp.zeros((d,)), n, sgd())
     for t in range(10):
@@ -111,7 +111,7 @@ def test_decentralized_trainer_metrics_contract():
     """The metrics dict exposes what operators monitor: loss, lr, consensus."""
     n, d = 4, 16
     step = jax.jit(make_dist_train_step(_toy_loss, "ecd", sgd(),
-                                        WireCodec(bits=8, block=128), n,
+                                        QuantWire(bits=8, block=128), n,
                                         constant(0.01)))
     state = init_dist_state("ecd", jnp.zeros((d,)), n, sgd())
     state, m = step(state, _batch(0, n))

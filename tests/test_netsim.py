@@ -95,3 +95,48 @@ def test_strategies_for_sparsifier_is_measured():
                           RandomSparsifier(p=0.25, block_size=128,
                                            value_dtype="float16"))["decentralized_lp"]
     assert lp16.bytes_per_iter == pytest.approx(2 * RESNET20_BYTES * 5.75 / 32)
+
+
+def test_strategies_for_follows_plan_degree():
+    """Satellite acceptance: latency rounds and gossip bytes follow
+    GossipPlan.degree — ring (degree 2) is bit-identical to the historical
+    hardcoded figures (plan or no plan), torus (degree 4) doubles both.  The
+    AllReduce baselines never depend on the gossip degree."""
+    from repro.core.compression import RandomQuantizer
+    from repro.distributed.gossip import make_gossip_plan
+    from repro.netsim import strategies_for
+
+    M, n = RESNET20_BYTES, 16
+    comp = RandomQuantizer(bits=4, block_size=1024)
+    ring = make_gossip_plan("ring", n)
+    torus = make_gossip_plan("torus", n)
+    assert ring.degree == 2 and torus.degree == 4
+
+    legacy = strategies_for(M, n, comp)              # no plan: ring default
+    ringed = strategies_for(M, n, comp, plan=ring)
+    for k in legacy:
+        assert legacy[k].bytes_per_iter == ringed[k].bytes_per_iter   # bit-identical
+        assert legacy[k].latency_rounds == ringed[k].latency_rounds
+    assert legacy["decentralized_fp"].bytes_per_iter == 2 * M
+    assert legacy["decentralized_fp"].latency_rounds == 2
+
+    t = strategies_for(M, n, comp, plan=torus)
+    assert t["decentralized_fp"].latency_rounds == 4
+    assert t["decentralized_fp"].bytes_per_iter == pytest.approx(4 * M)
+    assert t["decentralized_lp"].latency_rounds == 4
+    assert t["decentralized_lp"].bytes_per_iter == \
+        pytest.approx(2 * legacy["decentralized_lp"].bytes_per_iter)
+    # allreduce is gossip-degree independent
+    assert t["allreduce"].bytes_per_iter == legacy["allreduce"].bytes_per_iter
+    assert t["allreduce"].latency_rounds == legacy["allreduce"].latency_rounds
+
+
+def test_strategies_for_accepts_wire_format_directly():
+    """strategies_for consumes the WireFormat itself — the same object the
+    sharded runtime gossips with — not just the compressor view."""
+    from repro.distributed.wire import make_wire_format
+    from repro.netsim import strategies_for
+
+    wire = make_wire_format("quant:4:1024")
+    lp = strategies_for(RESNET20_BYTES, 8, wire)["decentralized_lp"]
+    assert lp.bytes_per_iter == pytest.approx(2 * RESNET20_BYTES * 4.03125 / 32)

@@ -3,8 +3,8 @@ plus the sparse value+index wire format.
 
 Three implementations must agree **word for word** on identical seeds — the
 Pallas kernels (interpret mode), the pure-jnp reference codec in
-kernels/ref.py, and the sharding-preserving WireCodec/SparseWireCodec in
-distributed/decentralized.py.  Plus roundtrip/extreme-value/ragged-tail
+kernels/ref.py, and the sharding-preserving QuantWire/SparseWire formats in
+distributed/wire.py.  Plus roundtrip/extreme-value/ragged-tail
 properties for every width the quantizer supports (2..8; 8 rides the int8
 container, so its "pack" case is the identity on container bytes), and
 roundtrip/ragged-tail/duplicate-free-index properties for the sparse codec
@@ -17,7 +17,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.distributed.decentralized import SparseWireCodec, WireCodec
+from repro.distributed.wire import QuantWire, SparseWire
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.quant import (
@@ -161,13 +161,13 @@ def test_wirecodec_words_equal_ref_property(bits, rows, last, seed):
     """WireCodec's packed words == kernels/ref.py words computed from the
     codec's own seed/block recipe, for ragged last dims (the codec pads to
     whole groups); decode roundtrips to the reference dequant exactly."""
-    from repro.distributed.decentralized import _dequantize_nd, _quantize_nd
+    from repro.distributed.wire import _dequantize_nd, _quantize_nd
 
-    codec = WireCodec(bits=bits, block=128)
+    codec = QuantWire(bits=bits, block=128)
     leaf = jax.random.normal(jax.random.key(seed), (rows, last)) * 2
     tree = {"w": leaf}
     step = jnp.asarray(seed % 1000, jnp.int32)
-    tdef, payloads = codec.encode(tree, step, salt=1)
+    tdef, payloads = codec.encode_tree(tree, step, salt=1)
 
     # replicate the codec's per-leaf seed and block geometry, then pack via ref
     leaf_seed = (step.astype(jnp.uint32) * jnp.uint32(2654435761)
@@ -181,7 +181,7 @@ def test_wirecodec_words_equal_ref_property(bits, rows, last, seed):
                                   np.asarray(scale))
     # decode == reference dequant of the unpacked words (bit-exact)
     np.testing.assert_array_equal(
-        np.asarray(codec.decode(tdef, payloads, tree)["w"]),
+        np.asarray(codec.decode_tree(tdef, payloads, tree)["w"]),
         np.asarray(_dequantize_nd(
             unpack_codes(payloads[0]["codes"], bits=bits), scale,
             bits=bits, orig_last=last, dtype=leaf.dtype)))
@@ -189,7 +189,7 @@ def test_wirecodec_words_equal_ref_property(bits, rows, last, seed):
 
 @pytest.mark.parametrize("bits", PACKABLE_BITS)
 def test_three_way_word_equality(bits):
-    """Kernel path, jnp reference, and WireCodec produce the SAME uint32 words
+    """Kernel path, jnp reference, and QuantWire produce the SAME uint32 words
     for the same seed and block geometry (the wire format is one format)."""
     block = 128
     rows, cols = 6, block
@@ -200,11 +200,11 @@ def test_three_way_word_equality(bits):
     pr, sr = kref.quantize_pack_2d_ref(x, seed, bits=bits)                 # jnp ref
     np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
 
-    # WireCodec on the same 2-D leaf with block == cols and the same seed:
+    # QuantWire on the same 2-D leaf with block == cols and the same seed:
     # _quantize_nd's (row, lane) counter or the (nblk=1) blocked view matches
     # quantize_2d_ref's row-major counter exactly
-    codec = WireCodec(bits=bits, block=block)
-    from repro.distributed.decentralized import _quantize_nd
+    codec = QuantWire(bits=bits, block=block)
+    from repro.distributed.wire import _quantize_nd
     codes_nd, scale_nd = _quantize_nd(x, seed.reshape(()), bits=bits, block=block)
     ref_codes, ref_scale = kref.quantize_2d_ref(x, seed, bits=bits)
     np.testing.assert_array_equal(
@@ -374,7 +374,7 @@ def test_sparse_topk_kernel_nan_safe():
 
 
 def test_sparse_three_way_word_equality():
-    """Kernel path, jnp reference, and SparseWireCodec produce the SAME
+    """Kernel path, jnp reference, and SparseWire produce the SAME
     packed index words and values for the same seed and block geometry (the
     sparse wire format is one format)."""
     block = 128
@@ -389,10 +389,10 @@ def test_sparse_three_way_word_equality():
         np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
         np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
 
-        # SparseWireCodec on the same 2-D leaf with block == cols and the same
+        # SparseWire on the same 2-D leaf with block == cols and the same
         # seed: the blocked (rows, 1, block) counter matches the kernel's
         # row-major counter exactly (nblk == 1)
-        from repro.distributed.decentralized import _sparsify_nd
+        from repro.distributed.wire import _sparsify_nd
 
         vn, in_ = _sparsify_nd(x, seed.reshape(()), p=0.25, block=block,
                                mode=mode)
@@ -400,7 +400,7 @@ def test_sparse_three_way_word_equality():
                                       np.asarray(ir))
         np.testing.assert_array_equal(np.asarray(vn.reshape(rows, -1)),
                                       np.asarray(vr))
-    assert SparseWireCodec(p=0.25, block=block).packed
+    assert SparseWire(p=0.25, block=block).packed
 
 
 @settings(max_examples=3, deadline=None)
@@ -416,11 +416,11 @@ def test_sparse_codec_words_equal_ref_property(mode, rows, last, seed):
     included: the codec's flat (row, block-index, lane) counter equals the
     oracle's row-major counter on the (rows * nblk, block) reshape, so this
     pins the nd encode path against the oracle — not against itself."""
-    codec = SparseWireCodec(p=0.25, block=128, mode=mode)
+    codec = SparseWire(p=0.25, block=128, mode=mode)
     leaf = jax.random.normal(jax.random.key(seed), (rows, last)) * 2
     tree = {"w": leaf}
     step = jnp.asarray(seed % 1000, jnp.int32)
-    tdef, payloads = codec.encode(tree, step, salt=1)
+    tdef, payloads = codec.encode_tree(tree, step, salt=1)
 
     leaf_seed = (step.astype(jnp.uint32) * jnp.uint32(2654435761)
                  ^ jnp.uint32(1 * 97 + 0))
@@ -441,21 +441,21 @@ def test_sparse_codec_words_equal_ref_property(mode, rows, last, seed):
     dense_r = np.asarray(kref.sparse_unpack_scatter_2d_ref(
         vals_r, idx_r, k=k, cols=block)).reshape(rows, nblk * block)[:, :last]
     np.testing.assert_array_equal(
-        np.asarray(codec.decode(tdef, payloads, tree)["w"]), dense_r)
+        np.asarray(codec.decode_tree(tdef, payloads, tree)["w"]), dense_r)
 
 
 def test_sparse_wire_bits_measured():
     """Acceptance: the sparse payload's measured wire bits match the codec's
     static figure — k fp32 values + packed idx words, no modeled number."""
-    codec = SparseWireCodec(p=0.25, block=128)
+    codec = SparseWire(p=0.25, block=128)
     tree = {"w": jnp.zeros((8, 64, 4096)), "b": jnp.zeros((8, 2048))}
     n_elem = sum(l.size for l in jax.tree.leaves(tree))
-    tdef, payload = codec.encode(tree, jnp.asarray(0, jnp.int32), salt=0)
+    tdef, payload = codec.encode_tree(tree, jnp.asarray(0, jnp.int32), salt=0)
     measured = 8.0 * sum(p["values"].nbytes + p["idx"].nbytes for p in payload) / n_elem
     assert measured == pytest.approx(9.75)         # (32*4 + 7*4) * 8 / 128
-    assert codec.payload_nbytes(tree) == \
+    assert codec.wire_nbytes(tree) == \
         sum(p["values"].nbytes + p["idx"].nbytes for p in payload)
     assert codec.wire_bits_per_element() == pytest.approx(9.75)
-    assert SparseWireCodec(p=0.25, block=128,
+    assert SparseWire(p=0.25, block=128,
                            value_dtype="float16").wire_bits_per_element() \
         == pytest.approx(5.75)
