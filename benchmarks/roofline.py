@@ -20,9 +20,12 @@ def load(path: str) -> list:
         for line in f:
             if line.strip():
                 out.append(json.loads(line))
-    # keep the latest record per (arch, shape, multi_pod, algo)
+    # keep the latest record per (arch, shape, multi_pod, algo); records
+    # without a shape (dryrun --smoke demo records) are not roofline rows
     latest = {}
     for r in out:
+        if "shape" not in r:
+            continue
         latest[(r["arch"], r["shape"], r.get("multi_pod"), r.get("algo"))] = r
     return list(latest.values())
 
@@ -60,7 +63,10 @@ def main(rows: List[str], path: str = "results/dryrun.jsonl") -> None:
                         f"{r['wire_bits_per_element']:.4f}")
         if "gossip_degree" in r:
             # payload rounds per iteration: the GossipPlan's shift count
-            # (ring 2, circulant torus 4) — what netsim charges latency for
+            # (ring 2, circulant torus 4) or, for a GossipSchedule, the
+            # per-step round charge (full_logn: sum over its log2(n)
+            # dimension-exchange rounds; exp: its single time-varying round)
+            # — what netsim charges latency for
             rows.append(f"roofline.{tag}.gossip_degree,0,{r['gossip_degree']}")
 
 

@@ -12,16 +12,33 @@ its ``compressor_for`` view, so the sweep exercises exactly the objects the
 sharded runtime gossips with, and every wire figure in the table is measured
 from the payload's real container nbytes.
 
+``--topology`` runs the sweep on any ``make_gossip_plan`` spec (ring, chain,
+torus, star, full, full_logn, exp, ...).  For a round schedule the stacked
+reference runs the schedule's *effective* dense W (what the multi-round
+sharded step realizes), and the header prints the netsim high-latency
+comparison: ``full_logn`` pays log2(n) permute rounds per iteration where the
+dense ``full``/``star`` plans pay n-1.
+
     PYTHONPATH=src python examples/compare_compression.py [--quick]
+    PYTHONPATH=src python examples/compare_compression.py --topology full_logn
 """
 import argparse
 
 import jax
+import numpy as np
 
-from repro.core import compressor_for, make_algorithm, make_topology, spectral_info
+from repro.core import compressor_for, spectral_info
+from repro.core.algorithms import Algorithm
 from repro.core.compression import measured_alpha
 from repro.core.testbed import make_problem, run
+from repro.distributed.gossip import (
+    GOSSIP_TOPOLOGIES,
+    GossipPlan,
+    GossipSchedule,
+    make_gossip_plan,
+)
 from repro.distributed.wire import make_wire_format
+from repro.netsim import HIGH_LAT, comm_time, strategies_for
 
 
 # fixed-capacity sparsifiers: wire bits measured from the value+index
@@ -46,6 +63,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: n=8 only, 150 steps (no convergence claims)")
+    ap.add_argument("--topology", default="ring", choices=list(GOSSIP_TOPOLOGIES),
+                    help="gossip plan/schedule spec; a schedule sweeps its "
+                         "effective dense W and prints the O(log n) round win")
     args = ap.parse_args()
     T = 150 if args.quick else 600
 
@@ -53,9 +73,32 @@ def main():
     sweep = [(tag, compressor_for(make_wire_format(spec)))
              for tag, spec in SPECS]
     for n in (8,) if args.quick else (8, 16):
-        info = spectral_info(make_topology("ring", n))
-        print(f"\nring n={n}:  spectral gap={info.spectral_gap:.3f}  "
+        gossip = make_gossip_plan(args.topology, n)
+        W = np.asarray(gossip.mixing_matrix())
+        info = spectral_info(W)
+        print(f"\n{args.topology} n={n}:  spectral gap={info.spectral_gap:.3f}  "
               f"DCD alpha budget={info.dcd_alpha_max():.3f}")
+        if isinstance(gossip, GossipSchedule):
+            # the schedule's point: same effective W, O(log n) permute rounds
+            # per iteration instead of the dense plan's O(n) — shown as
+            # netsim comm time at the paper's high-latency point, split
+            # honestly per strategy: D-PSGD pays the graph degree, the
+            # replica-tracking DCD/ECD pay one payload roll per aux tree
+            # (plan.replica_payloads), so the compressed win lives on exp
+            dense = GossipPlan.from_mixing_matrix(W, max_shifts=n)
+            wire4 = make_wire_format("quant:4:1024")
+            M = z.size * 4.0
+            s_s = strategies_for(M, n, wire4, plan=gossip)
+            s_d = strategies_for(M, n, wire4, plan=dense)
+            for strat, label in (("decentralized_fp", "D-PSGD fp32"),
+                                 ("decentralized_lp", "DCD/ECD 4-bit")):
+                t_s = comm_time(s_s[strat], HIGH_LAT)
+                t_d = comm_time(s_d[strat], HIGH_LAT)
+                print(f"  {gossip.name} vs dense, {label}: "
+                      f"{s_s[strat].latency_rounds} vs "
+                      f"{s_d[strat].latency_rounds} payload rounds/iter -> "
+                      f"comm@{HIGH_LAT.describe()} {t_s*1e3:.1f}ms vs "
+                      f"{t_d*1e3:.1f}ms ({t_d/t_s:.1f}x)")
         problem = make_problem(jax.random.key(1), n=n, m=256, d=32,
                                hetero=0.2, noise=0.1)
         print(f"{'comp':>7} {'wire b/elem':>12} {'alpha':>8} "
@@ -65,7 +108,7 @@ def main():
             alpha = measured_alpha(comp, jax.random.key(2), z)
             res = {}
             for name in ("dcd", "ecd"):
-                h = run(problem, make_algorithm(name, n, "ring", comp),
+                h = run(problem, Algorithm(name=name, W=W, compressor=comp),
                         T=T, lr=0.01, eval_every=T)
                 res[name] = h["final_dist_opt"]
             flag = "  <-- alpha over DCD budget" if alpha > info.dcd_alpha_max() else ""

@@ -13,8 +13,11 @@ payload: the traffic reduction is visible in the dry-run HLO, not just claimed.
 The codec is any :class:`~repro.distributed.wire.WireFormat` (quant / sparse /
 fp16 / identity, or a registered new one); the topology is any plan
 ``make_gossip_plan`` compiles (ring / chain / torus / ... or a custom mixing
-matrix).  Compressor and topology are independently pluggable, per the paper's
-§2 setup and the Koloskova/PowerGossip framing.
+matrix) — or a :class:`~repro.distributed.gossip.GossipSchedule` of rounds
+(``full_logn``: the dense average at O(log n) permutes per step; ``exp``: the
+time-varying one-peer exponential graph, one permute per step).  Compressor
+and topology are independently pluggable, per the paper's §2 setup and the
+Koloskova/PowerGossip framing.
 
 Algorithm state (beyond params X and optimizer moments):
 * D-PSGD/naive: none (naive re-encodes X each round).
@@ -30,6 +33,7 @@ the compiled step, and identical to the stacked reference's seeding.
 """
 from __future__ import annotations
 
+import functools
 import os
 import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
@@ -39,6 +43,8 @@ import jax.numpy as jnp
 
 from repro.distributed.gossip import (
     GossipPlan,
+    GossipSchedule,
+    as_schedule,
     make_gossip_plan,
     plan_mix,
     roll_tree,
@@ -58,10 +64,10 @@ class DistState(NamedTuple):
     step: jax.Array
 
 
-def _resolve_plan(plan, topology: Optional[str]) -> GossipPlan:
-    """plan may be a GossipPlan or (deprecated) an int node count combined
-    with a ``topology="ring"|"torus"`` string."""
-    if isinstance(plan, GossipPlan):
+def _resolve_plan(plan, topology: Optional[str]):
+    """plan may be a GossipPlan / GossipSchedule or (deprecated) an int node
+    count combined with a ``topology="ring"|"torus"`` string."""
+    if isinstance(plan, (GossipPlan, GossipSchedule)):
         assert topology is None, \
             "pass either a GossipPlan or the deprecated topology= string, not both"
         return plan
@@ -77,13 +83,15 @@ def _resolve_plan(plan, topology: Optional[str]) -> GossipPlan:
 
 def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
                     aux_dtype=None, topology: Optional[str] = None) -> DistState:
-    """``plan``: a :class:`GossipPlan` (or an int node count => ring) — one
-    replica/estimate tree per plan shift.  ``aux_dtype``: storage dtype for
+    """``plan``: a :class:`GossipPlan` / :class:`GossipSchedule` (or an int
+    node count => ring) — one replica/estimate tree per shift in the plan (for
+    a schedule: per shift in the union over rounds; one tree serves every
+    round that uses the shift).  ``aux_dtype``: storage dtype for
     replicas/estimates (bf16 on the biggest archs — they hold reconstructed
     quantized values, so bf16 rounding is well below the quantization bin; see
     DESIGN.md plans table)."""
-    plan = _resolve_plan(plan, topology)
-    n_nodes = plan.n
+    sched = as_schedule(_resolve_plan(plan, topology))
+    n_nodes = sched.n
     X = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape),
                      params_single)
 
@@ -95,10 +103,10 @@ def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
 
     aux: Dict[str, Any] = {}
     if algo == "dcd":
-        aux = {f"rep{s:+d}": aux_copy() for s in plan.shift_list}
+        aux = {f"rep{s:+d}": aux_copy() for s in sched.shift_union}
     elif algo == "ecd":
         aux = {"tilde_self": aux_copy()}
-        aux.update({f"tilde{s:+d}": aux_copy() for s in plan.shift_list})
+        aux.update({f"tilde{s:+d}": aux_copy() for s in sched.shift_union})
     return DistState(params=X, opt=opt.init(X), aux=aux,
                      step=jnp.zeros((), jnp.int32))
 
@@ -170,9 +178,11 @@ def make_dist_train_step(
     ``make_wire_format`` spec string (``"quant:4"``, ``"sparse:0.25:topk"``,
     ``"fp16"``); ``None`` means the raw fp32 leaves ride the permute (only
     meaningful for cpsgd/dpsgd).  ``plan``: the gossip graph — any
-    :class:`GossipPlan` (``make_gossip_plan("chain", n)``, a compiled mixing
-    matrix, ...) or an int node count for the default ring.  DCD/ECD aux trees
-    key off ``plan.shifts``; one collective-permute per shift per round.
+    :class:`GossipPlan` or :class:`GossipSchedule`
+    (``make_gossip_plan("chain", n)``, ``make_gossip_plan("full_logn", n)``, a
+    compiled mixing matrix, ...) or an int node count for the default ring.
+    DCD/ECD aux trees key off the schedule's shift union (== the plan's shifts
+    for a flat plan); one collective-permute per shift per round.
 
     ``fused`` (default: auto — on iff the wire format packs) routes every
     DCD/ECD receive-side decode through the format's fused axpy Pallas kernel
@@ -182,9 +192,22 @@ def make_dist_train_step(
     local payload slab straight into the kernel; without a mesh the kernel is
     called inline (single-process runs).  Multi-axis meshes fall back to the
     reference path — see :func:`_make_decode_axpy`.
+
+    Schedules: a multi-round :class:`GossipSchedule` iterates its rounds
+    INSIDE the jitted step — round r of step t re-encodes with the effective
+    counter ``t * period + r`` fed to the same (step, salt, leaf) seeding, so
+    compression randomness stays bit-reproducible and a single-round schedule
+    is bit-identical to the flat plan path.  The gradient update rides round
+    0; rounds 1.. are pure compressed gossip (the stacked equivalent is the
+    core/algorithms step chained with zero gradients — the differential tier
+    pins it).  A ``time_varying`` schedule (``exp``) instead runs ONE round
+    per step — ``rounds[t % period]`` via ``lax.switch`` — so every step pays
+    a single collective-permute while the effective W over a period is dense.
     """
     assert algo in ("cpsgd", "dpsgd", "naive", "dcd", "ecd")
-    plan = _resolve_plan(plan, topology)
+    sched = as_schedule(_resolve_plan(plan, topology))
+    rounds, n_rounds, union = sched.rounds, sched.period, sched.shift_union
+    time_varying = sched.time_varying and n_rounds > 1
     if wire is not None:
         wire = make_wire_format(wire)
     use_fused = (wire is not None and wire.packed) if fused is None else bool(fused)
@@ -204,6 +227,76 @@ def make_dist_train_step(
 
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn, has_aux=True), spmd_axis_name="node")
 
+    # ---- one gossip round per algorithm ----------------------------------
+    # Each helper advances (X, aux) through ONE plan round; ``upd`` is the
+    # optimizer update, threaded only into the round that owns the gradient
+    # (round 0 of a per-step schedule; every step of a time-varying one).
+    # ``enc_step`` is the effective encode counter — ``step`` for a flat plan,
+    # ``step * period + r`` inside a multi-round step — so the stacked
+    # reference reproduces the exact payload bits by chaining its own steps.
+
+    def _dpsgd_round(rnd, enc_step, carry, upd):
+        X_cur, aux_d = carry
+        X_mix = plan_mix(rnd, X_cur, {s: _roll(X_cur, s) for s in rnd.shift_list})
+        if upd is not None:
+            X_mix = apply_updates(X_mix, upd)
+        return X_mix, aux_d
+
+    def _naive_round(rnd, enc_step, carry, upd):
+        # compress the exchanged models directly — provably non-convergent
+        X_cur, aux_d = carry
+        tdef, payload = wire.encode_tree(X_cur, enc_step, salt=1)
+        X_mix = plan_mix(
+            rnd, wire.decode_tree(tdef, payload, X_cur),
+            {s: wire.decode_tree(tdef, _roll(payload, s), X_cur)
+             for s in rnd.shift_list})
+        if upd is not None:
+            X_mix = apply_updates(X_mix, upd)
+        return X_mix, aux_d
+
+    def _dcd_round(rnd, enc_step, carry, upd):
+        X_cur, aux_d = carry
+        X_half = plan_mix(rnd, X_cur,
+                          {s: aux_d[f"rep{s:+d}"] for s in rnd.shift_list})
+        if upd is not None:
+            X_half = apply_updates(X_half, upd)
+        Z = jax.tree.map(lambda a, b: a - b, X_half, X_cur)
+        tdef, payload = wire.encode_tree(Z, enc_step, salt=2)
+        # receive side: one fused unpack+dequant+axpy kernel per leaf; every
+        # union replica advances with the rolled payload so rep{s} keeps
+        # tracking roll(X, s) through every round
+        aux_d = dict(aux_d)
+        X_cur = dec_axpy(tdef, payload, X_cur, 1.0)
+        for s in union:
+            aux_d[f"rep{s:+d}"] = dec_axpy(
+                tdef, _roll(payload, s), aux_d[f"rep{s:+d}"], 1.0)
+        return X_cur, aux_d
+
+    def _ecd_round(rnd, enc_step, carry, upd):
+        X_cur, aux_d = carry
+        s_t = (enc_step + 1).astype(jnp.float32)
+        X_mix = plan_mix(rnd, aux_d["tilde_self"],
+                         {s: aux_d[f"tilde{s:+d}"] for s in rnd.shift_list})
+        X_next = apply_updates(X_mix, upd) if upd is not None else X_mix
+        Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s_t) * a + 0.5 * s_t * b,
+                         X_cur, X_next)
+        tdef, payload = wire.encode_tree(Z, enc_step, salt=3)
+        decay = 1.0 - 2.0 / s_t
+        blend = 2.0 / s_t
+        # decay*tilde + blend*decode in ONE fused pass per leaf: the decay
+        # scale rides the kernel's acc_weight operand, so no pre-scaled
+        # f32 accumulator is ever written to HBM
+        aux_d = dict(aux_d)
+        aux_d["tilde_self"] = dec_axpy(tdef, payload, aux_d["tilde_self"],
+                                       blend, decay)
+        for s in union:
+            aux_d[f"tilde{s:+d}"] = dec_axpy(tdef, _roll(payload, s),
+                                             aux_d[f"tilde{s:+d}"], blend, decay)
+        return X_next, aux_d
+
+    round_fn = {"dpsgd": _dpsgd_round, "naive": _naive_round,
+                "dcd": _dcd_round, "ecd": _ecd_round}.get(algo)
+
     def step(state: DistState, batch: Any) -> Tuple[DistState, Dict[str, jax.Array]]:
         (losses, metrics), grads = grad_fn(state.params, batch)
         lr = lr_schedule(state.step)
@@ -217,50 +310,31 @@ def make_dist_train_step(
                 updates)
             X_new = apply_updates(X, mean_upd)
 
-        elif algo == "dpsgd":
-            # full-precision gossip: rolls X itself (fp32 on the wire)
-            X_mix = plan_mix(plan, X, {s: _roll(X, s) for s in plan.shift_list})
-            X_new = apply_updates(X_mix, updates)
+        elif time_varying:
+            # one round per step, selected by the traced step counter; every
+            # branch updates the same (X, union-aux) structure, and the
+            # gradient rides every step (each step IS one algorithm step with
+            # the time-varying W_t = rounds[t % period])
+            X_new, aux = jax.lax.switch(
+                state.step % n_rounds,
+                [functools.partial(round_fn, rnd, state.step, upd=updates)
+                 for rnd in rounds],
+                (X, aux))
 
-        elif algo == "naive":
-            # compress the exchanged models directly — provably non-convergent
-            tdef, payload = wire.encode_tree(X, state.step, salt=1)
-            X_mix = plan_mix(
-                plan, wire.decode_tree(tdef, payload, X),
-                {s: wire.decode_tree(tdef, _roll(payload, s), X)
-                 for s in plan.shift_list})
-            X_new = apply_updates(X_mix, updates)
-
-        elif algo == "dcd":
-            X_half = apply_updates(
-                plan_mix(plan, X, {s: aux[f"rep{s:+d}"] for s in plan.shift_list}),
-                updates)
-            Z = jax.tree.map(lambda a, b: a - b, X_half, X)
-            tdef, payload = wire.encode_tree(Z, state.step, salt=2)
-            # receive side: one fused unpack+dequant+axpy kernel per leaf
-            X_new = dec_axpy(tdef, payload, X, 1.0)
-            for s in plan.shift_list:
-                aux[f"rep{s:+d}"] = dec_axpy(
-                    tdef, _roll(payload, s), aux[f"rep{s:+d}"], 1.0)
-
-        else:  # ecd
-            s_t = (state.step + 1).astype(jnp.float32)
-            X_mix = plan_mix(plan, aux["tilde_self"],
-                             {s: aux[f"tilde{s:+d}"] for s in plan.shift_list})
-            X_new = apply_updates(X_mix, updates)
-            Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s_t) * a + 0.5 * s_t * b,
-                             X, X_new)
-            tdef, payload = wire.encode_tree(Z, state.step, salt=3)
-            decay = 1.0 - 2.0 / s_t
-            blend = 2.0 / s_t
-            # decay*tilde + blend*decode in ONE fused pass per leaf: the decay
-            # scale rides the kernel's acc_weight operand, so no pre-scaled
-            # f32 accumulator is ever written to HBM
-            aux["tilde_self"] = dec_axpy(tdef, payload, aux["tilde_self"],
-                                         blend, decay)
-            for s in plan.shift_list:
-                aux[f"tilde{s:+d}"] = dec_axpy(tdef, _roll(payload, s),
-                                               aux[f"tilde{s:+d}"], blend, decay)
+        else:
+            # all rounds inside this one step: the effective (dense) W at
+            # sum(round.degree) permutes.  dpsgd/naive apply the update AFTER
+            # the rounds (X W_eff - lr G — one stacked step with the effective
+            # W); dcd/ecd thread it into round 0 (the stacked equivalent is
+            # their reference step chained with zero gradients after round 0)
+            grad_round = 0 if algo in ("dcd", "ecd") else None
+            carry = (X, aux)
+            for r_idx, rnd in enumerate(rounds):
+                carry = round_fn(rnd, state.step * n_rounds + r_idx, carry,
+                                 updates if r_idx == grad_round else None)
+            X_new, aux = carry
+            if grad_round is None:
+                X_new = apply_updates(X_new, updates)
 
         consensus = sum(
             jnp.sum((l - jnp.mean(l, axis=0, keepdims=True)) ** 2)

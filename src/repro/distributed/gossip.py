@@ -19,15 +19,30 @@ so the default ``max_shifts`` refuses them with a clear error rather than
 silently compiling an O(n)-round gossip step (pass ``max_shifts=n`` to force
 it, or run arbitrary W on the stacked reference in :mod:`repro.core`).
 
+Dense mixing matrices get a second compiled form: a :class:`GossipSchedule` —
+an ordered tuple of sparse :class:`GossipPlan` *rounds* whose product
+``W_R ... W_1`` realizes the dense target.  ``star``/``full`` (the paper's
+densest graphs, ~n shifts as one plan) compile to the mixed-radix
+dimension-exchange schedule: ``ceil(log2 n)`` rounds of one shift each at
+``n = 2^m`` whose product is *exactly* the uniform average ``J/n``, so the
+per-iteration cost drops from O(n) collective-permutes to O(log n).  The
+``exp`` schedule is the time-varying one-peer exponential graph: one shift
+per *step*, cycling ``2^k`` — the effective W over a period is the same dense
+average but every step pays a single graph permute (D-PSGD; the
+replica-tracking DCD/ECD pay one payload permute per union shift — see
+:attr:`GossipSchedule.replica_payloads` for the honest split).
+
 ``make_gossip_plan(spec, n)`` resolves topology names — ``ring`` / ``chain``
 / ``torus`` (the circulant flattened torus the runtime always used, 4 uniform
 shifts) / ``torus2d`` (the exact 2-D torus via ``core.topology``, 6 masked
-shifts) / ``star`` / ``full`` — or passes an existing plan through, so the
-next topology is a registration, not a fork of the train step.
+shifts) / ``star`` / ``full`` (dense one-round plans) / ``full_logn`` /
+``exp`` (round schedules) — or passes an existing plan/schedule through, so
+the next topology is a registration, not a fork of the train step.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -66,6 +81,14 @@ class GossipPlan:
         return len(self.shifts)
 
     @property
+    def replica_payloads(self) -> int:
+        """Payload collective-permutes per step for the replica-tracking
+        algorithms (DCD/ECD roll the encoded delta once per aux tree).  For a
+        flat plan this IS the degree; multi-round schedules pay more — see
+        :attr:`GossipSchedule.replica_payloads`."""
+        return self.degree
+
+    @property
     def shift_list(self) -> Tuple[int, ...]:
         return tuple(s for s, _ in self.shifts)
 
@@ -88,7 +111,9 @@ class GossipPlan:
     @classmethod
     def from_mixing_matrix(cls, W: np.ndarray, *, name: str = "custom",
                            max_shifts: int = 8, tol: float = 1e-12,
-                           validate: bool = True) -> "GossipPlan":
+                           validate: bool = True,
+                           schedule: bool = False,
+                           ) -> "Union[GossipPlan, GossipSchedule]":
         """Compile a mixing matrix into node-axis shifts.
 
         Decomposes W into its roll diagonals ``w_s[i] = W[i, (i - s) % n]``;
@@ -96,7 +121,17 @@ class GossipPlan:
         collapse to a scalar when uniform.  Raises a ``ValueError`` when the
         support needs more than ``max_shifts`` diagonals — W is then not
         circulant-representable within the permute budget (each shift is one
-        collective-permute of the full payload)."""
+        collective-permute of the full payload).
+
+        ``schedule=True`` switches to the factorization path and returns a
+        :class:`GossipSchedule` instead: sparse W still compiles to a single
+        round, but the dense graphs the flat decomposition refuses (``full``,
+        ``star``) factor into O(log n) dimension-exchange rounds — see
+        :meth:`GossipSchedule.from_mixing_matrix`."""
+        if schedule:
+            return GossipSchedule.from_mixing_matrix(
+                W, name=name, max_shifts=max_shifts, tol=tol,
+                validate=validate)
         W = np.asarray(W, dtype=np.float64)
         assert W.ndim == 2 and W.shape[0] == W.shape[1], W.shape
         n = W.shape[0]
@@ -123,7 +158,10 @@ class GossipPlan:
         diag = W[rows, rows]
         self_w: ShiftWeight = float(diag[0]) \
             if np.allclose(diag, diag[0], atol=tol) else np.ascontiguousarray(diag)
-        spectral = topo.spectral_info(W) if n > 1 else None
+        # spectral_info assumes symmetric W (eigvalsh); unvalidated W may be
+        # merely doubly stochastic (e.g. a directed dimension-exchange round)
+        symmetric = validate or bool(np.allclose(W, W.T, atol=1e-9))
+        spectral = topo.spectral_info(W) if n > 1 and symmetric else None
         return cls(n=n, self_weight=self_w,
                    shifts=tuple(sorted(shifts, key=lambda sw: sw[0])),
                    spectral=spectral, name=name)
@@ -164,6 +202,226 @@ class GossipPlan:
         return cls.from_mixing_matrix(W, name="torus")
 
 
+# ------------------------------------------------------------------ schedules
+
+def _canon_shift(s: int, n: int) -> int:
+    """Canonicalize a node-axis shift into ``(-n/2, n/2]``."""
+    s %= n
+    return s if s <= n // 2 else s - n
+
+
+def _mixed_radix(n: int) -> Tuple[int, ...]:
+    """Prime factorization of ``n``, smallest factors first — the radices of
+    the dimension-exchange schedule (each radix-``d`` round costs ``d - 1``
+    shifts, so the prime factorization minimizes the total)."""
+    radices, d, m = [], 2, n
+    while d * d <= m:
+        while m % d == 0:
+            radices.append(d)
+            m //= d
+        d += 1
+    if m > 1:
+        radices.append(m)
+    return tuple(radices)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GossipSchedule:
+    """An ordered tuple of :class:`GossipPlan` rounds — the compiled form of a
+    mixing matrix that is *not* sparse in the shift basis but whose action
+    factors into sparse rounds: the product ``W_R ... W_1`` of the rounds'
+    matrices realizes the dense target with ``sum(round.degree)`` total
+    collective-permutes instead of ~n.
+
+    ``time_varying=False`` (``full_logn``): every training step runs ALL
+    rounds in order, so each step applies the effective dense W at
+    O(log n) graph permutes.  ``time_varying=True`` (``exp``): step ``t``
+    runs only round ``t % period`` — one graph permute per step — and the
+    effective W is realized over a full period (the round-robin exponential
+    graph of Ying et al. / the time-varying design space of Koloskova et
+    al.).  Replica-tracking DCD/ECD additionally roll each round's payload
+    once per union-shift aux tree — :attr:`replica_payloads` is that honest
+    per-step payload figure (== ``degree`` for flat plans).
+
+    Individual rounds need only be doubly stochastic, not symmetric (the
+    dimension-exchange round ``(I + P_s)/2`` is directed); symmetry and the
+    spectral contract live on the *effective* matrix, which is what
+    ``spectral`` describes and the schedule-equivalence test tier pins.
+    """
+
+    n: int
+    rounds: Tuple[GossipPlan, ...]
+    time_varying: bool = False
+    name: str = "custom"
+
+    def __post_init__(self):
+        assert self.rounds, "a schedule needs at least one round"
+        assert all(r.n == self.n for r in self.rounds), \
+            [r.n for r in self.rounds]
+
+    @property
+    def period(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def round_degrees(self) -> Tuple[int, ...]:
+        return tuple(r.degree for r in self.rounds)
+
+    @property
+    def degree(self) -> int:
+        """Graph-degree collective-permutes per *training step*: the sum over
+        rounds when every step runs the whole schedule, the per-round maximum
+        when time-varying steps run one round each.  This is what the
+        algorithms that roll per round-shift pay — D-PSGD rolls X itself,
+        naive re-encodes and rolls the model payload — and what netsim
+        charges the ``decentralized_fp`` strategy (full_logn at n=16: 4 vs
+        the dense plan's 15; exp: ONE permute per step)."""
+        if self.time_varying:
+            return max(self.round_degrees)
+        return sum(self.round_degrees)
+
+    @property
+    def replica_payloads(self) -> int:
+        """Payload collective-permutes per training step for the
+        REPLICA-TRACKING algorithms (DCD/ECD): every round's encoded delta
+        must reach every union-shift aux tree to keep ``rep{s} == roll(X,s)``
+        (a replica that misses one delta is stale forever — deltas only exist
+        as compressed payloads, and deferring the rolls just moves them), so
+        a per-step schedule pays ``period * |shift_union|`` and a
+        time-varying one ``|shift_union|`` per step.  Flat plans pay exactly
+        ``degree``.  This is what netsim charges ``decentralized_lp``: the
+        O(log n)-vs-O(n) win for compressed gossip lives on the time-varying
+        ``exp`` schedule (log2(n) payloads per step vs n-1 — plus log2(n)
+        aux trees instead of n-1 either way); per-step ``full_logn`` keeps
+        the aux-memory win but pays ~|union|^2 payload permutes."""
+        per_round = len(self.shift_union)
+        return per_round if self.time_varying else self.period * per_round
+
+    @property
+    def shift_union(self) -> Tuple[int, ...]:
+        """Sorted union of every round's shifts — the DCD/ECD aux key set
+        (one replica/estimate tree per union shift serves every round)."""
+        return tuple(sorted({s for r in self.rounds for s in r.shift_list}))
+
+    # a schedule quacks like a plan where it matters (netsim, dryrun records)
+    @property
+    def uniform(self) -> bool:
+        return all(r.uniform for r in self.rounds)
+
+    def effective_mixing_matrix(self) -> np.ndarray:
+        """The dense W one full pass realizes: ``W_R @ ... @ W_1`` (round 1
+        is applied first, so it sits rightmost in the product)."""
+        return functools.reduce(
+            lambda acc, r: r.mixing_matrix() @ acc, self.rounds, np.eye(self.n))
+
+    def mixing_matrix(self) -> np.ndarray:
+        """Alias of :meth:`effective_mixing_matrix` (plan-shaped surface)."""
+        return self.effective_mixing_matrix()
+
+    @property
+    def spectral(self) -> Optional[SpectralInfo]:
+        """SpectralInfo of the *effective* W (None when it is not symmetric —
+        the paper's assumptions are stated for symmetric W)."""
+        W = self.effective_mixing_matrix()
+        if self.n > 1 and np.allclose(W, W.T, atol=1e-9):
+            return topo.spectral_info(W)
+        return None
+
+    # ------------------------------------------------------------ factories
+    @classmethod
+    def averaging(cls, n: int, *, name: str = "full_logn",
+                  time_varying: bool = False) -> "GossipSchedule":
+        """The mixed-radix dimension-exchange schedule: exact uniform
+        averaging ``J/n`` in ``len(radices)`` rounds.
+
+        Round ``i`` (radix ``d``, stride ``m = prod(earlier radices)``)
+        averages the ``d`` nodes ``{i, i-m, ..., i-(d-1)m}``:
+        ``W_i = (1/d) (I + P_m + ... + P_{(d-1)m})`` — ``d - 1`` shifts.  The
+        product telescopes over the mixed-radix digit expansion of ``0..n-1``,
+        so ``W_R ... W_1 = (1/n) sum_t P_t = J/n`` *exactly*, for every n.
+        For ``n = 2^m`` that is the hypercube dimension exchange: m rounds of
+        ONE shift each (``2^k``), i.e. ``star(16)``'s 15 payload exchanges
+        become 4."""
+        if n == 1:
+            return cls(n=1, rounds=(GossipPlan.ring(1),), name=name)
+        rounds, stride = [], 1
+        for i, d in enumerate(_mixed_radix(n)):
+            shifts = tuple((_canon_shift(j * stride, n), 1.0 / d)
+                           for j in range(1, d))
+            rounds.append(GossipPlan(n=n, self_weight=1.0 / d, shifts=shifts,
+                                     spectral=None, name=f"dimex{i}"))
+            stride *= d
+        return cls(n=n, rounds=tuple(rounds), time_varying=time_varying,
+                   name=name)
+
+    @classmethod
+    def exp(cls, n: int) -> "GossipSchedule":
+        """The time-varying one-peer exponential graph: step ``t`` averages
+        each node with its ``+2^(t mod log2 n)`` neighbor — ONE graph
+        collective-permute per step (D-PSGD; DCD/ECD pay
+        :attr:`replica_payloads` = log2 n payload rolls) — and the effective
+        W over a period is exactly ``J/n``.  Exact averaging needs ``n`` to be a power of two
+        (Ying et al. 2021); other n should use ``full_logn``'s mixed-radix
+        rounds, which are exact for every n."""
+        if n < 2 or n & (n - 1):
+            raise ValueError(
+                f"exp needs a power-of-two node count for exact averaging, "
+                f"got {n}; use full_logn (mixed-radix, exact for any n) "
+                "instead")
+        sched = cls.averaging(n, name="exp", time_varying=True)
+        assert all(r.degree == 1 for r in sched.rounds)
+        return sched
+
+    @classmethod
+    def from_mixing_matrix(cls, W: np.ndarray, *, name: str = "custom",
+                           max_shifts: int = 8, tol: float = 1e-12,
+                           validate: bool = True) -> "GossipSchedule":
+        """Factor a mixing matrix into sparse rounds.
+
+        Sparse W (support within ``max_shifts`` shift diagonals) compiles to a
+        single-round schedule — the exact flat plan.  The dense graphs the
+        flat decomposition refuses factor structurally:
+
+        * ``full`` (``W == J/n``): the mixed-radix dimension-exchange rounds,
+          whose product is J/n exactly.
+        * ``star``: the hub's gather+scatter is recursive halving/doubling —
+          the SAME dimension-exchange rounds.  The schedule's effective W is
+          the uniform average (the fixed point of star gossip), NOT the
+          single-step Metropolis star matrix: that matrix provably does not
+          factor into sparse doubly-stochastic rounds (any positive
+          spoke->hub->spoke path forces a spoke-spoke entry), so the exact
+          one-step star stays available as the dense ~n-shift plan.
+
+        Anything else dense raises with the options spelled out."""
+        W = np.asarray(W, dtype=np.float64)
+        n = W.shape[0]
+        try:
+            plan = GossipPlan.from_mixing_matrix(
+                W, name=name, max_shifts=max_shifts, tol=tol,
+                validate=validate)
+            return cls(n=n, rounds=(plan,), name=plan.name)
+        except ValueError:
+            pass
+        if np.allclose(W, np.full((n, n), 1.0 / n), atol=1e-12):
+            return cls.averaging(n, name="full_logn" if name == "custom" else name)
+        if np.allclose(W, topo.star(n), atol=1e-12):
+            return cls.averaging(n, name="star_logn" if name == "custom" else name)
+        raise ValueError(
+            f"W spans more than {max_shifts} shift diagonals and is neither "
+            "J/n (full) nor the Metropolis star; factor it yourself into "
+            "GossipPlan rounds (GossipSchedule(n, rounds)) or run it on the "
+            "stacked reference (repro.core.algorithms).")
+
+
+def as_schedule(spec) -> GossipSchedule:
+    """Normalize a plan-or-schedule to a :class:`GossipSchedule` (a plan
+    becomes the single-round schedule; the runtime only speaks schedules)."""
+    if isinstance(spec, GossipSchedule):
+        return spec
+    plan = make_gossip_plan(spec)
+    return GossipSchedule(n=plan.n, rounds=(plan,), name=plan.name)
+
+
 def _named(name: str) -> Callable[[int], GossipPlan]:
     if name == "torus2d":
         # the exact 2-D torus: 4 graph neighbors but 6 shift diagonals (the
@@ -175,26 +433,35 @@ def _named(name: str) -> Callable[[int], GossipPlan]:
         # compiled on request with the budget widened to n
         return lambda n: GossipPlan.from_mixing_matrix(
             topo.make_topology(name, n), name=name, max_shifts=max(n, 8))
+    if name == "full_logn":
+        # O(log n) dimension-exchange rounds, exact J/n effective W
+        return GossipSchedule.averaging
+    if name == "exp":
+        # time-varying one-peer exponential graph: one permute per step
+        return GossipSchedule.exp
     ctor = {"ring": GossipPlan.ring, "chain": GossipPlan.chain,
             "torus": GossipPlan.torus}.get(name)
     if ctor is None:
         raise ValueError(
             f"unknown gossip topology {name!r}; known: "
-            "ring, chain, torus, torus2d, star, full — or pass a GossipPlan / "
-            "mixing matrix")
+            "ring, chain, torus, torus2d, star, full, full_logn, exp — or "
+            "pass a GossipPlan / GossipSchedule / mixing matrix")
     return ctor
 
 
-GOSSIP_TOPOLOGIES = ("ring", "chain", "torus", "torus2d", "star", "full")
+GOSSIP_TOPOLOGIES = ("ring", "chain", "torus", "torus2d", "star", "full",
+                     "full_logn", "exp")
 
 
-def make_gossip_plan(spec, n: Optional[int] = None) -> GossipPlan:
-    """The one factory: spec -> :class:`GossipPlan`.
+def make_gossip_plan(spec, n: Optional[int] = None):
+    """The one factory: spec -> :class:`GossipPlan` | :class:`GossipSchedule`.
 
-    ``spec`` is an existing plan (checked against ``n`` and passed through), a
-    topology name (``ring`` / ``chain`` / ``torus`` / ``torus2d`` / ``star`` /
-    ``full``), or a mixing matrix (compiled via ``from_mixing_matrix``)."""
-    if isinstance(spec, GossipPlan):
+    ``spec`` is an existing plan or schedule (checked against ``n`` and passed
+    through), a topology name (``ring`` / ``chain`` / ``torus`` / ``torus2d``
+    / ``star`` / ``full`` give one-round plans; ``full_logn`` / ``exp`` give
+    round schedules), or a mixing matrix (compiled via
+    ``from_mixing_matrix``)."""
+    if isinstance(spec, (GossipPlan, GossipSchedule)):
         assert n is None or spec.n == n, f"plan has n={spec.n}, caller wants {n}"
         return spec
     if isinstance(spec, np.ndarray) or (hasattr(spec, "ndim") and spec.ndim == 2):

@@ -74,7 +74,13 @@ def leaf_seed(step: jax.Array, salt: int, leaf_index: int) -> jax.Array:
     """The one (step, salt, leaf)-seeding recipe shared by the sharded runtime
     and the stacked reference: Knuth-hash the step counter, XOR a static
     per-(salt, leaf) offset.  Deterministic and key-free inside the compiled
-    step; both runs derive identical seeds, so payloads are bit-identical."""
+    step; both runs derive identical seeds, so payloads are bit-identical.
+
+    Multi-round gossip schedules fold their round index into this same recipe
+    by passing the effective counter ``step * period + round`` as ``step`` —
+    no second salt axis, a 1-round schedule seeds exactly like its flat plan,
+    and the stacked reference reproduces any round's payload bits by chaining
+    its own steps with the same counters."""
     return (jnp.asarray(step).astype(jnp.uint32) * jnp.uint32(2654435761)
             ^ jnp.uint32(salt * 97 + leaf_index))
 

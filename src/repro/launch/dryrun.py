@@ -62,6 +62,20 @@ def _nonembed_params(cfg, p_sds) -> int:
     return total
 
 
+def _gossip_record(gossip, algo: str) -> Dict[str, Any]:
+    """Shared gossip accounting fields for the dryrun JSONL records.
+    ``gossip_payloads`` is the payload permutes this algo actually issues per
+    step: DCD/ECD roll every delta once per union-shift aux tree
+    (``replica_payloads``, == degree on flat plans); everything else rolls
+    per round shift (``degree``)."""
+    payloads = gossip.replica_payloads if algo in ("dcd", "ecd") else gossip.degree
+    return {
+        "topology": gossip.name, "gossip_degree": gossip.degree,
+        "gossip_rounds": getattr(gossip, "period", 1),
+        "gossip_payloads": int(payloads),
+    }
+
+
 def _state_shardings(state_sds, mesh, n_routed):
     """Shardings for the full DistState: param-like trees stacked over node."""
     def shard_tree(tree):
@@ -153,7 +167,7 @@ def _train_record(arch, shape_name, shape, algo, wire, codec, gossip, multi_pod,
         }
     return {
         "arch": arch, "shape": shape_name, "kind": "train", "algo": algo,
-        "wire": wire, "topology": gossip.name, "gossip_degree": gossip.degree,
+        "wire": wire, **_gossip_record(gossip, algo),
         "multi_pod": multi_pod,
         "n_nodes": n, "n_chips": n_chips,
         "params_total": n_total, **wire_rec,
@@ -286,7 +300,7 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
             state, metrics = compiled(state, batch)
     rec = {
         "arch": arch, "kind": "smoke", "algo": algo, "wire": wire,
-        "topology": gossip.name, "gossip_degree": gossip.degree,
+        **_gossip_record(gossip, algo),
         "n_devices": int(devs.size), "compile_s": round(t1 - t0, 1),
         "steps": steps, "loss": float(metrics["loss"]),
     }

@@ -9,7 +9,9 @@ The gossip wire format and topology are specs, not flags-per-codec:
 ``--wire quant:8`` / ``--wire sparse:0.25:topk`` / ``--wire fp16`` pick any
 registered :class:`~repro.distributed.wire.WireFormat`; ``--topology`` picks
 any :func:`~repro.distributed.gossip.make_gossip_plan` name (ring, chain,
-torus, torus2d, star, full).
+torus, torus2d, star, full — or the round schedules ``full_logn``, the dense
+average at O(log n) permutes per step, and ``exp``, the time-varying one-peer
+exponential graph at ONE permute per step).
 """
 from __future__ import annotations
 

@@ -47,17 +47,23 @@ class CommStrategy:
 
 
 def strategies(model_bytes: float, n: int,
-               wire_bits: float = 8.03, degree: int = 2) -> Dict[str, CommStrategy]:
+               wire_bits: float = 8.03, degree: int = 2,
+               lp_degree: Optional[int] = None) -> Dict[str, CommStrategy]:
     """``degree``: gossip payload rounds per iteration — the plan's number of
     node-axis shifts (ring 2, circulant torus 4).  Both the bytes through each
     NIC and the latency-bound rounds scale with it; the AllReduce baselines
-    are degree-independent."""
+    are degree-independent.  ``lp_degree`` (default: ``degree``) charges the
+    compressed decentralized strategy separately: the replica-tracking
+    DCD/ECD runtime rolls every encoded delta once per aux tree, which equals
+    the graph degree for flat plans but not for multi-round schedules (see
+    ``GossipSchedule.replica_payloads``)."""
     M = model_bytes
+    lp = degree if lp_degree is None else lp_degree
     return {
         "allreduce": CommStrategy("allreduce", 2 * (n - 1) / n * M, 2 * (n - 1)),
         "decentralized_fp": CommStrategy("decentralized_fp", degree * M, degree),
         "decentralized_lp": CommStrategy("decentralized_lp",
-                                         degree * M * wire_bits / 32, degree),
+                                         lp * M * wire_bits / 32, lp),
         # naive centralized quantized (for completeness; paper omits it)
         "allreduce_lp": CommStrategy("allreduce_lp", 2 * (n - 1) / n * M * wire_bits / 32,
                                      2 * (n - 1)),
@@ -71,13 +77,25 @@ def strategies_for(model_bytes: float, n: int, wire,
     — a :class:`~repro.distributed.wire.WireFormat` or a compressor view —
     (bit-stream-packed uint32 words at 2..7 bits, int8 at 8, fp32/fp16 values
     + packed uint index words for the fixed-capacity sparsifiers).  ``plan``
-    (a :class:`~repro.distributed.gossip.GossipPlan`) sets the gossip degree:
+    (a :class:`~repro.distributed.gossip.GossipPlan` or
+    :class:`~repro.distributed.gossip.GossipSchedule`) sets the gossip degree:
     latency rounds and payload exchanges both follow ``plan.degree`` (ring=2,
-    matching the historical default bit for bit; circulant torus=4)."""
+    matching the historical default bit for bit; circulant torus=4).  A
+    multi-round schedule splits the charge honestly: ``decentralized_fp``
+    (D-PSGD rolls per round-shift) pays ``sum(round.degree)`` per iteration —
+    ``full_logn`` pays log2(n) rounds where the dense ``full``/``star`` plans
+    pay n-1, the high-latency O(log n)-vs-O(n) win; ``decentralized_lp``
+    (replica-tracking DCD/ECD roll every delta once per union-shift aux tree)
+    pays ``plan.replica_payloads`` — for compressed gossip the O(log n) win
+    lives on the time-varying ``exp`` schedule (log2(n) payloads/step vs
+    n-1), while per-step ``full_logn`` trades payload count for the log-sized
+    aux memory."""
     degree = 2 if plan is None else int(plan.degree)
+    lp_degree = degree if plan is None else \
+        int(getattr(plan, "replica_payloads", degree))
     return strategies(model_bytes, n,
                       wire_bits=float(wire.wire_bits_per_element()),
-                      degree=degree)
+                      degree=degree, lp_degree=lp_degree)
 
 
 def comm_time(s: CommStrategy, net: NetworkCondition) -> float:

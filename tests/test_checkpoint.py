@@ -74,6 +74,34 @@ def test_dist_state_checkpoint_roundtrip(tmp_path, algo, topo):
     _assert_state_equal(cont, cont_r)
 
 
+def test_dist_state_checkpoint_roundtrip_schedule(tmp_path):
+    """A GossipSchedule-shaped DistState (aux keyed by the shift UNION —
+    rep+1/rep+2/rep+4/rep+8 for full_logn at n=16) round-trips bit-exactly
+    and resumes the exact multi-round trajectory (the encode counter is a
+    pure function of the restored step and the static round index)."""
+    n, d = 16, 32
+    sched = make_gossip_plan("full_logn", n)
+    opt = adamw()
+    step = jax.jit(make_dist_train_step(_toy_loss, "dcd", opt,
+                                        QuantWire(bits=4, block=128), sched,
+                                        constant(0.05)))
+    state = init_dist_state("dcd", jnp.zeros((d,)), sched, opt)
+    assert set(state.aux) == {f"rep{s:+d}" for s in sched.shift_union} \
+        == {"rep+1", "rep+2", "rep+4", "rep+8"}
+    for t in range(2):
+        state, _ = step(state, _toy_batch(jax.random.key(t), n, d=d))
+    ckpt = str(tmp_path / "ckpt")
+    save(ckpt, 2, state, metadata={"topology": sched.name})
+    restored, manifest = restore(
+        ckpt, init_dist_state("dcd", jnp.zeros((d,)), sched, opt), 2)
+    assert manifest["metadata"]["topology"] == "full_logn"
+    _assert_state_equal(state, restored)
+    batch = _toy_batch(jax.random.key(99), n, d=d)
+    cont, _ = step(state, batch)
+    cont_r, _ = step(restored, batch)
+    _assert_state_equal(cont, cont_r)
+
+
 def test_checkpoint_rejects_missing_plan_aux():
     """Restoring a ring checkpoint into a torus-shaped state must fail loudly:
     the torus plan's aux names (rep+4) don't exist in the ring checkpoint —

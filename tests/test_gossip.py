@@ -1,17 +1,28 @@
-"""GossipPlan tests: mixing-matrix round-trips, spec factories, back-compat.
+"""GossipPlan/GossipSchedule tests: mixing-matrix round-trips, spec
+factories, schedule equivalence, back-compat.
 
 The plan is the compiled form of a mixing matrix in the node-axis shift basis;
 ``from_mixing_matrix`` must round-trip every circulant-representable topology
 in core/topology (weights match, SpectralInfo attached) and refuse dense W
-with a clear error.
+with a clear error — unless ``schedule=True``, in which case the dense
+averaging graphs (``full``, ``star``) factor into O(log n) dimension-exchange
+rounds whose product equals the dense target to 1e-12 (the
+schedule-equivalence tier below).
 """
 import warnings
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
 
 from repro.core import topology as topo
-from repro.distributed.gossip import GossipPlan, make_gossip_plan
+from repro.distributed.gossip import (
+    GossipPlan,
+    GossipSchedule,
+    as_schedule,
+    make_gossip_plan,
+)
 
 
 @pytest.mark.parametrize("name,n", [("ring", 8), ("ring", 16), ("ring", 2),
@@ -97,6 +108,179 @@ def test_plan_degenerate_sizes():
     np.testing.assert_allclose(p2.mixing_matrix(), topo.ring(2), atol=1e-12)
 
 
+# ------------------------------------------- schedule-equivalence tier
+#
+# A GossipSchedule's product W_R ... W_1 must equal its dense target exactly
+# (1e-12) — the acceptance bar for the O(log n) star/full compilation — and
+# the schedule must actually be cheap: at n = 16 the dense plans pay 15 shifts
+# per step, the schedules at most ceil(log2 16) * 2 = 8 (in fact 4).
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+@pytest.mark.parametrize("spec", ["full_logn", "exp"])
+def test_schedule_effective_equals_dense_target(spec, n):
+    """Acceptance: the full_logn / exp schedules realize the dense averaging
+    target J/n to 1e-12, and the effective W's SpectralInfo matches the dense
+    full plan's (the one that pays n-1 shifts)."""
+    sched = make_gossip_plan(spec, n)
+    target = topo.fully_connected(n)
+    np.testing.assert_allclose(sched.effective_mixing_matrix(), target,
+                               atol=1e-12)
+    dense = GossipPlan.from_mixing_matrix(target, name="full", max_shifts=n)
+    assert dense.degree == n - 1
+    assert sched.spectral is not None
+    assert sched.spectral.rho == pytest.approx(dense.spectral.rho, abs=1e-9)
+    assert sched.spectral.spectral_gap == pytest.approx(
+        dense.spectral.spectral_gap, abs=1e-9)
+    assert sched.spectral.mu == pytest.approx(dense.spectral.mu, abs=1e-9)
+
+
+@pytest.mark.parametrize("name", ["star", "full"])
+def test_schedule_logn_shift_budget_at_16(name):
+    """Acceptance: star/full at n=16 compile (via the schedule= factorization
+    path) to <= ceil(log2(16))*2 = 8 total shifts per iteration — actually 4,
+    the hypercube dimension exchange — vs 15 for the flat dense plan."""
+    n = 16
+    W = topo.make_topology(name, n)
+    flat = make_gossip_plan(name, n)          # the exact one-round dense plan
+    assert flat.degree == 15
+    sched = GossipPlan.from_mixing_matrix(W, schedule=True)
+    assert isinstance(sched, GossipSchedule)
+    total_shifts = sum(sched.round_degrees)
+    assert total_shifts <= 8 and sched.degree == total_shifts == 4
+    assert sched.period == 4
+    assert all(r.degree == 1 for r in sched.rounds)      # one permute each
+    assert sched.shift_union == (1, 2, 4, 8)
+    # full's target is its own matrix; star's is the uniform average (the
+    # fixed point of hub gossip — the Metropolis star matrix itself provably
+    # does not factor into sparse nonnegative rounds)
+    np.testing.assert_allclose(sched.effective_mixing_matrix(),
+                               topo.fully_connected(n), atol=1e-12)
+    assert sched.name == ("star_logn" if name == "star" else "full_logn")
+
+
+@pytest.mark.parametrize("n", [6, 9, 12, 15])
+def test_schedule_mixed_radix_exact_for_any_n(n):
+    """The dimension-exchange factorization is exact for non-powers-of-two
+    too: radix-d rounds cost d-1 shifts and the product is J/n to 1e-12."""
+    sched = GossipSchedule.averaging(n)
+    np.testing.assert_allclose(sched.effective_mixing_matrix(),
+                               topo.fully_connected(n), atol=1e-12)
+    assert sum(sched.round_degrees) < n - 1          # strictly beats dense
+    for r in sched.rounds:                            # rounds doubly stochastic
+        M = r.mixing_matrix()
+        np.testing.assert_allclose(M.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-12)
+        assert (M >= 0).all()
+
+
+def test_exp_schedule_one_peer_time_varying():
+    """exp: one shift per round, time-varying (one permute per STEP), period
+    log2 n, union {2^k}, exact J/n over a period; non-power-of-two refused."""
+    e = make_gossip_plan("exp", 8)
+    assert e.time_varying and e.period == 3 and e.degree == 1
+    assert e.round_degrees == (1, 1, 1)
+    assert e.shift_union == (1, 2, 4)
+    np.testing.assert_allclose(e.effective_mixing_matrix(),
+                               topo.fully_connected(8), atol=1e-12)
+    with pytest.raises(ValueError, match="power-of-two"):
+        make_gossip_plan("exp", 6)
+    # honest per-step payload accounting: D-PSGD pays the single graph
+    # permute, replica-tracking DCD/ECD pay one payload roll per union shift
+    assert e.replica_payloads == 3
+    assert make_gossip_plan("full_logn", 8).replica_payloads == 9
+    assert make_gossip_plan("ring", 8).replica_payloads == 2   # flat == degree
+
+
+def test_schedule_factorization_path_sparse_and_refusal():
+    """schedule=True keeps sparse W exact as a single round, and still raises
+    a clear error on dense W that is neither J/n nor the star."""
+    ring = GossipPlan.from_mixing_matrix(topo.ring(8), schedule=True)
+    assert isinstance(ring, GossipSchedule) and ring.period == 1
+    assert ring.degree == 2
+    np.testing.assert_allclose(ring.effective_mixing_matrix(), topo.ring(8),
+                               atol=1e-12)
+    W_dense = np.linalg.matrix_power(topo.chain(16), 5)   # banded -> dense
+    with pytest.raises(ValueError, match="neither"):
+        GossipPlan.from_mixing_matrix(W_dense, schedule=True)
+
+
+def test_from_mixing_matrix_validate_false_asymmetric_round():
+    """validate=False compiles a merely doubly-stochastic (asymmetric) W —
+    e.g. one directed dimension-exchange round — on both the flat and the
+    schedule= path: spectral is None (eigvalsh needs symmetry), the shift
+    decomposition still round-trips exactly."""
+    n = 8
+    W = np.zeros((n, n))
+    idx = np.arange(n)
+    W[idx, idx] = 0.5
+    W[idx, (idx - 1) % n] = 0.5                  # (I + P_1)/2
+    plan = GossipPlan.from_mixing_matrix(W, validate=False)
+    assert plan.spectral is None and plan.degree == 1
+    np.testing.assert_allclose(plan.mixing_matrix(), W, atol=1e-12)
+    sched = GossipPlan.from_mixing_matrix(W, validate=False, schedule=True)
+    assert isinstance(sched, GossipSchedule) and sched.period == 1
+    np.testing.assert_allclose(sched.effective_mixing_matrix(), W, atol=1e-12)
+    with pytest.raises(AssertionError):          # default still validates
+        GossipPlan.from_mixing_matrix(W)
+
+
+def test_as_schedule_wraps_plans():
+    plan = make_gossip_plan("torus", 16)
+    sched = as_schedule(plan)
+    assert sched.period == 1 and sched.rounds[0] is plan
+    assert sched.degree == plan.degree == 4
+    assert sched.shift_union == tuple(sorted(plan.shift_list))
+    assert as_schedule(sched) is sched               # idempotent
+
+
+# ------------------------------------------- from_mixing_matrix property tier
+
+
+def _random_banded_w(n: int, n_mags: int, per_node: bool, seed: int) -> np.ndarray:
+    """A random symmetric doubly-stochastic banded W: random +-shift supports
+    (always including +-1 for connectivity), scalar or per-node weights."""
+    rng = np.random.default_rng(seed)
+    mags = {1} | set(rng.choice(np.arange(1, n // 2 + 1),
+                                size=min(n_mags, n // 2), replace=False).tolist())
+    rows = np.arange(n)
+    A = np.zeros((n, n))
+    for s in sorted(mags):
+        w = rng.uniform(0.1, 1.0, size=n) if per_node else \
+            np.full(n, float(rng.uniform(0.1, 1.0)))
+        A[rows, (rows - s) % n] += w
+    A = (A + A.T) / 2.0                   # symmetric, support still +-mags
+    W = A / (A.sum(axis=1).max() * 1.25)  # rows sum < 1, strictly
+    W[rows, rows] += 1.0 - W.sum(axis=1)  # positive diagonal tops rows to 1
+    return W
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(3, 17),
+    n_mags=st.integers(1, 3),
+    per_node=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_from_mixing_matrix_roundtrips_random_banded_w(n, n_mags, per_node, seed):
+    """Satellite acceptance: from_mixing_matrix(W).mixing_matrix() round-trips
+    random symmetric doubly-stochastic banded W (random shift supports, scalar
+    and per-node weights, n in 3..17) to 1e-12, with every compiled shift
+    canonicalized into (-n/2, n/2]."""
+    W = _random_banded_w(n, n_mags, per_node, seed)
+    topo.check_mixing_matrix(W)                       # the generator is valid
+    plan = GossipPlan.from_mixing_matrix(W, max_shifts=n)
+    np.testing.assert_allclose(plan.mixing_matrix(), W, atol=1e-12)
+    assert plan.spectral is not None
+    info = topo.spectral_info(W)
+    assert plan.spectral.rho == pytest.approx(info.rho, abs=1e-9)
+    for s in plan.shift_list:
+        assert -n / 2 < s <= n / 2, (s, n)
+    if not per_node:
+        # symmetric circulant W collapses every weight to a scalar
+        assert plan.uniform
+
+
 # ------------------------------------------------------------ back-compat
 
 def test_deprecated_spellings_resolve_to_new_objects():
@@ -136,3 +320,63 @@ def test_deprecated_spellings_resolve_to_new_objects():
     with pytest.warns(DeprecationWarning):
         dd.make_dist_train_step(loss, "dcd", sgd(), QuantWire(bits=8, block=128),
                                 16, constant(0.05), topology="torus")
+
+
+def test_deprecated_spellings_warn_exactly_once():
+    """Satellite acceptance: every deprecated spelling — make_compressor,
+    topology= strings on the runtime entry points, and the old
+    WireCodec/SparseWireCodec/gossip_shifts names — emits exactly ONE
+    DeprecationWarning per use and resolves to an object equal to the one the
+    new path builds (locks the PR 4 compat surface before anything drifts)."""
+    import jax.numpy as jnp
+
+    from repro.core.compression import RandomQuantizer, make_compressor
+    from repro.distributed import decentralized as dd
+    from repro.distributed.wire import QuantWire, SparseWire
+    from repro.optim import sgd
+    from repro.optim.schedules import constant
+
+    def deprecations(record):
+        return [w for w in record if issubclass(w.category, DeprecationWarning)]
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        comp = make_compressor("quant", bits=4, block_size=128)
+    assert len(deprecations(rec)) == 1
+    assert comp == RandomQuantizer(bits=4, block_size=128)
+    assert comp.wire == QuantWire(bits=4, block=128)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = dd.WireCodec
+    assert len(deprecations(rec)) == 1 and old is QuantWire
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = dd.SparseWireCodec
+    assert len(deprecations(rec)) == 1 and old is SparseWire
+
+    plan = make_gossip_plan("ring", 8)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        w_s, shifts = dd.gossip_shifts("ring", 8)
+    assert len(deprecations(rec)) == 1
+    assert w_s == plan.self_weight and shifts == dict(plan.shifts)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        state_old = dd.init_dist_state("dcd", jnp.zeros((16,)), 16, sgd(),
+                                       topology="torus")
+    assert len(deprecations(rec)) == 1
+    state_new = dd.init_dist_state("dcd", jnp.zeros((16,)),
+                                   make_gossip_plan("torus", 16), sgd())
+    assert set(state_old.aux) == set(state_new.aux)
+
+    def loss(p, b):
+        l = jnp.mean((b - p) ** 2)
+        return l, {}
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        dd.make_dist_train_step(loss, "dcd", sgd(), QuantWire(bits=8, block=128),
+                                16, constant(0.05), topology="torus")
+    assert len(deprecations(rec)) == 1

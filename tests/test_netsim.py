@@ -131,6 +131,96 @@ def test_strategies_for_follows_plan_degree():
     assert t["allreduce"].latency_rounds == legacy["allreduce"].latency_rounds
 
 
+def test_strategies_for_schedule_charges_sum_of_round_degrees():
+    """Satellite acceptance: a multi-round GossipSchedule charges the
+    full-precision gossip strategy sum(round.degree) latency rounds AND
+    payload exchanges per iteration — full_logn at n=16 pays 4 (one shift per
+    dimension-exchange round) where the dense star/full plans pay 15 — while
+    the compressed strategy is charged the replica-honest figure
+    (period * |union| for per-step schedules: DCD/ECD roll every delta once
+    per aux tree; |union| for the time-varying exp)."""
+    from repro.distributed.gossip import make_gossip_plan
+    from repro.distributed.wire import make_wire_format
+    from repro.netsim import strategies_for
+
+    M, n = RESNET20_BYTES, 16
+    wire = make_wire_format("quant:4:1024")
+    sched = make_gossip_plan("full_logn", n)
+    assert sum(sched.round_degrees) == 4 and sched.replica_payloads == 16
+    s = strategies_for(M, n, wire, plan=sched)
+    assert s["decentralized_fp"].latency_rounds == 4
+    assert s["decentralized_fp"].bytes_per_iter == pytest.approx(4 * M)
+    assert s["decentralized_lp"].latency_rounds == 16
+    assert s["decentralized_lp"].bytes_per_iter == \
+        pytest.approx(16 * M * 4.03125 / 32)
+
+    dense = make_gossip_plan("star", n)
+    sd = strategies_for(M, n, wire, plan=dense)
+    assert sd["decentralized_lp"].latency_rounds == 15     # flat: lp == degree
+
+    exp = make_gossip_plan("exp", n)
+    assert exp.degree == 1 and exp.replica_payloads == 4
+    se = strategies_for(M, n, wire, plan=exp)
+    assert se["decentralized_fp"].latency_rounds == 1      # one graph permute
+    assert se["decentralized_lp"].latency_rounds == 4
+    assert se["decentralized_lp"].bytes_per_iter == \
+        pytest.approx(4 * M * 4.03125 / 32)
+
+
+def test_star_vs_logn_schedules_crossover_with_latency():
+    """Satellite acceptance: the O(log n)-vs-O(n) win at high latency —
+    full-precision gossip on full_logn pays 4 rounds where the dense star
+    pays 15 (ratio -> 15/4 as latency dominates), and for compressed gossip
+    the same win lives on the time-varying exp schedule (4 replica payloads
+    per step vs the dense plan's 15)."""
+    from repro.distributed.gossip import make_gossip_plan
+    from repro.distributed.wire import make_wire_format
+    from repro.netsim import comm_time, strategies_for
+
+    M, n = RESNET20_BYTES, 16
+    wire = make_wire_format("quant:4:1024")
+    star = strategies_for(M, n, wire, plan=make_gossip_plan("star", n))
+    logn = strategies_for(M, n, wire, plan=make_gossip_plan("full_logn", n))
+    exp = strategies_for(M, n, wire, plan=make_gossip_plan("exp", n))
+    lo = NetworkCondition(bandwidth_bps=1.4e9, latency_s=1e-7)
+    hi = NetworkCondition(bandwidth_bps=1.4e9, latency_s=5e-3)
+    # full precision: full_logn wins at both ends, by the round ratio at
+    # high latency
+    assert comm_time(logn["decentralized_fp"], lo) < \
+        comm_time(star["decentralized_fp"], lo)
+    assert comm_time(star["decentralized_fp"], hi) / \
+        comm_time(logn["decentralized_fp"], hi) == pytest.approx(15 / 4, rel=0.05)
+    # compressed: exp wins by the same O(log n)-vs-O(n) ratio at high
+    # latency; per-step full_logn does NOT (16 replica payloads vs 15 —
+    # its win is the log-sized aux memory, charged honestly)
+    assert comm_time(star["decentralized_lp"], hi) / \
+        comm_time(exp["decentralized_lp"], hi) == pytest.approx(15 / 4, rel=0.05)
+    assert comm_time(logn["decentralized_lp"], hi) >= \
+        comm_time(star["decentralized_lp"], hi)
+    # and the exp schedule beats the paper's AllReduce baseline at high latency
+    assert comm_time(exp["decentralized_lp"], hi) < \
+        comm_time(exp["allreduce"], hi)
+
+
+def test_ring_figures_bit_identical_to_seed_model():
+    """Satellite acceptance: the degree-2 ring default — with no plan, with
+    the ring plan, and with the 1-round ring schedule — reproduces the seed
+    cost model's numbers bit for bit."""
+    from repro.distributed.gossip import as_schedule, make_gossip_plan
+    from repro.distributed.wire import make_wire_format
+    from repro.netsim import strategies_for
+
+    M, n = RESNET20_BYTES, 8
+    wire = make_wire_format("quant:8:1024")
+    seed = strategies(M, n, wire_bits=wire.wire_bits_per_element())
+    ring = make_gossip_plan("ring", n)
+    for plan in (None, ring, as_schedule(ring)):
+        got = strategies_for(M, n, wire, plan=plan)
+        for k in seed:
+            assert got[k].bytes_per_iter == seed[k].bytes_per_iter, k
+            assert got[k].latency_rounds == seed[k].latency_rounds, k
+
+
 def test_strategies_for_accepts_wire_format_directly():
     """strategies_for consumes the WireFormat itself — the same object the
     sharded runtime gossips with — not just the compressor view."""
