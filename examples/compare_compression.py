@@ -19,8 +19,15 @@ sharded step realizes), and the header prints the netsim high-latency
 comparison: ``full_logn`` pays log2(n) permute rounds per iteration where the
 dense ``full``/``star`` plans pay n-1.
 
+``--drop-rate R`` switches to the failure sweep: every algorithm runs through
+the stacked :class:`~repro.core.algorithms.GossipReference` under the same
+deterministic per-edge drop masks the sharded runtime consumes, at rates
+{0, R, min(2.5R, 0.75)}, and the table is the convergence-vs-drop-rate curve
+(plus the epoch-time-vs-straggler-tail curve when ``--straggler`` is set).
+
     PYTHONPATH=src python examples/compare_compression.py [--quick]
     PYTHONPATH=src python examples/compare_compression.py --topology full_logn
+    PYTHONPATH=src python examples/compare_compression.py --drop-rate 0.2 --quick
 """
 import argparse
 
@@ -28,7 +35,7 @@ import jax
 import numpy as np
 
 from repro.core import compressor_for, spectral_info
-from repro.core.algorithms import Algorithm
+from repro.core.algorithms import Algorithm, GossipReference
 from repro.core.compression import measured_alpha
 from repro.core.testbed import make_problem, run
 from repro.distributed.gossip import (
@@ -38,7 +45,13 @@ from repro.distributed.gossip import (
     make_gossip_plan,
 )
 from repro.distributed.wire import make_wire_format
-from repro.netsim import HIGH_LAT, comm_time, strategies_for
+from repro.netsim import (
+    BEST_NETWORK,
+    HIGH_LAT,
+    comm_time,
+    straggler_curve,
+    strategies_for,
+)
 
 
 # fixed-capacity sparsifiers: wire bits measured from the value+index
@@ -59,6 +72,58 @@ SPECS = [
 ]
 
 
+# the failure sweep's contenders: plain DCD's replica trees go stale on every
+# dropped edge (the degraded mode freezes + down-weights them, but the error
+# is real), while D-PSGD carries no cross-node state — a dropped edge just
+# renormalizes that round's mixing row — so it tolerates rates that visibly
+# degrade DCD.  ECD sits in between: extrapolation amplifies staleness.
+DROP_CONFIGS = [
+    ("dcd 4b", "dcd", "quant:4:32"),
+    ("ecd 4b", "ecd", "quant:4:32"),
+    ("naive 4b", "naive", "quant:4:32"),
+    ("dpsgd fp", "dpsgd", None),
+]
+
+
+def drop_sweep(args, T: int) -> None:
+    """Convergence-vs-drop-rate table on the stacked reference — the same
+    per-edge PCG masks (and the same renormalized mixing rows) the sharded
+    runtime executes, so these numbers transfer to the production step."""
+    r = args.drop_rate
+    rates = sorted({0.0, r, min(2.5 * r, 0.75)})
+    for n in (8,) if args.quick else (8, 16):
+        plan = make_gossip_plan(args.topology, n)
+        problem = make_problem(jax.random.key(1), n=n, m=256, d=32,
+                               hetero=0.2, noise=0.1)
+        print(f"\n{args.topology} n={n}: final dist-to-opt vs drop rate "
+              f"(deterministic per-edge masks, salt={args.drop_salt})")
+        print(f"{'config':>9} " + " ".join(f"{f'drop={x:g}':>12}" for x in rates))
+        for tag, name, spec in DROP_CONFIGS:
+            wire = make_wire_format(spec) if spec else None
+            row = []
+            for rate in rates:
+                drop = f"{rate}:{args.drop_salt}" if rate else None
+                ref = GossipReference(name=name, plan=plan, wire=wire, drop=drop)
+                h = run(problem, ref, T=T, lr=0.01, eval_every=T)
+                row.append(h["final_dist_opt"])
+            print(f"{tag:>9} " + " ".join(f"{v:>12.3e}" for v in row))
+    if args.straggler > 0.0:
+        n = 8
+        plan = make_gossip_plan(args.topology, n)
+        wire4 = make_wire_format("quant:4:32")
+        strat = strategies_for(4096 * 4.0, n, wire4, plan=plan,
+                               drop_rate=r)["decentralized_lp"]
+        print(f"\nepoch-time-vs-straggler-tail, {args.topology} n={n}, "
+              f"4-bit wire, drop={r:g}:")
+        for row in straggler_curve(strat, BEST_NETWORK, compute_s=1e-3,
+                                   iters_per_epoch=100, n_edges=plan.degree,
+                                   sigmas=(0.0, args.straggler / 2,
+                                           args.straggler, 2 * args.straggler)):
+            print(f"  sigma={row['straggler']:<5g} "
+                  f"epoch mean={row['epoch_s_mean']:.3f}s "
+                  f"p95={row['epoch_s_p95']:.3f}s")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -66,8 +131,20 @@ def main():
     ap.add_argument("--topology", default="ring", choices=list(GOSSIP_TOPOLOGIES),
                     help="gossip plan/schedule spec; a schedule sweeps its "
                          "effective dense W and prints the O(log n) round win")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="run the failure sweep instead: convergence vs drop "
+                         "rate {0, R, 2.5R} on the stacked reference")
+    ap.add_argument("--drop-salt", type=int, default=0,
+                    help="stream salt for the deterministic drop masks")
+    ap.add_argument("--straggler", type=float, default=0.0,
+                    help="also print the epoch-time-vs-straggler-tail curve "
+                         "at this lognormal sigma (failure sweep only)")
     args = ap.parse_args()
     T = 150 if args.quick else 600
+
+    if args.drop_rate > 0.0:
+        drop_sweep(args, T)
+        return
 
     z = jax.random.normal(jax.random.key(0), (4096,))
     sweep = [(tag, compressor_for(make_wire_format(spec)))

@@ -154,6 +154,197 @@ _STEPS = {
 ALGORITHMS = tuple(_STEPS)
 
 
+# --------------------------------------------------------------------------
+# Shift-space reference with failure injection (GossipReference)
+# --------------------------------------------------------------------------
+
+# Wire-format encode salts, shared with the sharded runtime so both encode
+# bit-identical payloads for the same (step, leaf) counter.
+_WIRE_SALTS = {"naive": 1, "dcd": 2, "ecd": 3}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GossipReference:
+    """Stacked, transparent mirror of the sharded runtime — including drops.
+
+    :class:`Algorithm` is the *paper-math* reference: dense ``X W`` tensordot
+    and DCD's implicit-replica shortcut (replicas coincide with the true
+    neighbor models, so they are never stored).  That shortcut is exactly
+    what edge failure breaks: a dropped compressed delta leaves a replica
+    stale, so replicas and neighbors diverge *by design*.  GossipReference is
+    therefore the runtime-semantics reference: it keeps the explicit
+    per-shift replica/estimate trees, encodes through the same
+    :class:`~repro.distributed.wire.WireFormat` with the same
+    ``(step, salt, leaf)`` counters (bit-identical wire words), consumes the
+    exact same per-edge masks
+    (:func:`~repro.distributed.failures.edge_drop_mask`), applies the same
+    row-stochastic renormalization and degraded-mode freeze/decay policy —
+    but entirely stacked: dense decode once, ``jnp.roll`` of decoded values,
+    no shard_map, no fused kernels, no ``lax.switch``.  The failure
+    differential tier pins the sharded step against it at every drop rate.
+
+    The step counter starts at 0 (runtime convention, unlike
+    :class:`AlgoState`'s paper-facing 1) and the effective encode counter of
+    round ``r`` of step ``t`` is ``t * period + r`` for per-step schedules
+    and ``t`` for time-varying ones — exactly the runtime's seeding.
+    ``step_fn`` has the :class:`Algorithm` signature (so
+    :func:`repro.core.testbed.run` drives it unchanged) but ignores the PRNG
+    key: compression and failure randomness are pure functions of the step.
+    """
+
+    name: str                    # dpsgd | naive | dcd | ecd
+    plan: Any                    # GossipPlan | GossipSchedule
+    wire: Optional[Any] = None   # WireFormat | spec str | None (dpsgd)
+    drop: Optional[Any] = None   # DropSpec | rate float | "rate[:salt[:decay]]"
+
+    def __post_init__(self):
+        from repro.distributed.failures import make_drop_spec
+        from repro.distributed.gossip import as_schedule
+        from repro.distributed.wire import make_wire_format
+
+        assert self.name in ("dpsgd", "naive", "dcd", "ecd"), self.name
+        object.__setattr__(self, "plan", as_schedule(self.plan))
+        if self.wire is not None:
+            object.__setattr__(self, "wire", make_wire_format(self.wire))
+        assert self.wire is not None or self.name == "dpsgd", \
+            f"{self.name} needs a wire format"
+        object.__setattr__(self, "drop", make_drop_spec(self.drop))
+
+    @property
+    def n_nodes(self) -> int:
+        return self.plan.n
+
+    def init(self, params_single: Any) -> AlgoState:
+        from repro.distributed.failures import fresh_key
+
+        sched, n = self.plan, self.n_nodes
+        X = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params_single)
+        aux: dict = {}
+        if self.name == "dcd":
+            aux = {f"rep{s:+d}": X for s in sched.shift_union}
+        elif self.name == "ecd":
+            aux = {"tilde_self": X}
+            aux.update({f"tilde{s:+d}": X for s in sched.shift_union})
+        if self.drop is not None and self.name in ("dcd", "ecd"):
+            aux.update({fresh_key(s, self.drop.salt): jnp.ones((n,), jnp.float32)
+                        for s in sched.shift_union})
+        return AlgoState(params=X, step=jnp.asarray(0, jnp.int32), aux=aux)
+
+    def step_fn(self) -> Callable[[AlgoState, Any, jax.Array, jax.Array], AlgoState]:
+        from repro.distributed.failures import (
+            edge_drop_mask, fresh_key, select_delivered, update_freshness)
+        from repro.distributed.gossip import plan_mix_gated, roll_tree
+
+        sched, wire, drop, name = self.plan, self.wire, self.drop, self.name
+        rounds, period, union = sched.rounds, sched.period, sched.shift_union
+        time_varying = sched.time_varying and period > 1
+        n = self.n_nodes
+        salt = _WIRE_SALTS.get(name, 0)
+
+        def masks_for(enc_step):
+            if drop is None:
+                return {s: jnp.ones((n,), jnp.float32) for s in union}
+            return {s: edge_drop_mask(n, s, enc_step, drop) for s in union}
+
+        def decode_f32(tdef, payload, like_tree):
+            likes = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), like_tree)
+            return wire.decode_tree(tdef, payload, likes)
+
+        def axpy(acc, dec, w=1.0, acc_w=1.0):
+            return jax.tree.map(
+                lambda a, d: (acc_w * a + w * d).astype(a.dtype), acc, dec)
+
+        def one_round(rnd, enc_step, X, aux, grads, lr):
+            aux = dict(aux)
+            masks = masks_for(enc_step)
+            if drop is not None and name in ("dcd", "ecd"):
+                for s in union:
+                    fk = fresh_key(s, drop.salt)
+                    aux[fk] = update_freshness(aux[fk], masks[s], drop.decay)
+                gates = {s: masks[s] * aux[fresh_key(s, drop.salt)]
+                         for s in rnd.shift_list}
+            else:
+                gates = {s: masks[s] for s in rnd.shift_list}
+
+            if name == "dpsgd":
+                nbrs = {s: roll_tree(X, s) for s in rnd.shift_list}
+                X = plan_mix_gated(rnd, X, nbrs, gates)
+                if grads is not None:
+                    X = _sgd(X, grads, lr)
+                return X, aux
+
+            if name == "naive":
+                tdef, payload = wire.encode_tree(X, enc_step, salt)
+                dec = decode_f32(tdef, payload, X)
+                X = plan_mix_gated(rnd, dec,
+                                   {s: roll_tree(dec, s) for s in rnd.shift_list},
+                                   gates)
+                if grads is not None:
+                    X = _sgd(X, grads, lr)
+                return X, aux
+
+            if name == "dcd":
+                reps = {s: aux[f"rep{s:+d}"] for s in rnd.shift_list}
+                X_half = plan_mix_gated(rnd, X, reps, gates)
+                if grads is not None:
+                    X_half = _sgd(X_half, grads, lr)
+                Z = jax.tree.map(lambda a, b: a - b, X_half, X)
+                tdef, payload = wire.encode_tree(Z, enc_step, salt)
+                dec = decode_f32(tdef, payload, Z)
+                X = axpy(X, dec)
+                for s in union:
+                    rep_new = axpy(aux[f"rep{s:+d}"], roll_tree(dec, s))
+                    if drop is not None:
+                        rep_new = select_delivered(masks[s], rep_new,
+                                                   aux[f"rep{s:+d}"])
+                    aux[f"rep{s:+d}"] = rep_new
+                return X, aux
+
+            # ecd
+            s_t = (enc_step + 1).astype(jnp.float32)
+            tildes = {s: aux[f"tilde{s:+d}"] for s in rnd.shift_list}
+            X_mix = plan_mix_gated(rnd, aux["tilde_self"], tildes, gates)
+            X_next = _sgd(X_mix, grads, lr) if grads is not None else X_mix
+            Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s_t) * a + 0.5 * s_t * b,
+                             X, X_next)
+            tdef, payload = wire.encode_tree(Z, enc_step, salt)
+            dec = decode_f32(tdef, payload, Z)
+            est_decay, blend = 1.0 - 2.0 / s_t, 2.0 / s_t
+            aux["tilde_self"] = axpy(aux["tilde_self"], dec, blend, est_decay)
+            for s in union:
+                est = axpy(aux[f"tilde{s:+d}"], roll_tree(dec, s), blend,
+                           est_decay)
+                if drop is not None:
+                    est = select_delivered(masks[s], est, aux[f"tilde{s:+d}"])
+                aux[f"tilde{s:+d}"] = est
+            return X_next, aux
+
+        def step(state: AlgoState, grads: Any, key: jax.Array,
+                 lr: jax.Array) -> AlgoState:
+            del key   # randomness is a pure function of the step counter
+            t = state.step
+            X, aux = state.params, state.aux
+            if time_varying:
+                X, aux = jax.lax.switch(
+                    t % period,
+                    [lambda args, rnd=rnd: one_round(rnd, t, *args, grads, lr)
+                     for rnd in rounds],
+                    (X, aux))
+            else:
+                grad_round = 0 if name in ("dcd", "ecd") else None
+                for r_idx, rnd in enumerate(rounds):
+                    X, aux = one_round(
+                        rnd, t * period + r_idx, X, aux,
+                        grads if r_idx == grad_round else None, lr)
+                if grad_round is None:
+                    X = _sgd(X, grads, lr)
+            return AlgoState(params=X, step=t + 1, aux=aux)
+
+        return step
+
+
 def make_algorithm(
     name: str,
     n_nodes: int,

@@ -41,12 +41,20 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.failures import (
+    edge_drop_mask,
+    fresh_key,
+    make_drop_spec,
+    select_delivered,
+    update_freshness,
+)
 from repro.distributed.gossip import (
     GossipPlan,
     GossipSchedule,
     as_schedule,
     make_gossip_plan,
     plan_mix,
+    plan_mix_gated,
     roll_tree,
 )
 from repro.distributed.wire import WireFormat, make_wire_format
@@ -82,16 +90,25 @@ def _resolve_plan(plan, topology: Optional[str]):
 
 
 def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
-                    aux_dtype=None, topology: Optional[str] = None) -> DistState:
+                    aux_dtype=None, topology: Optional[str] = None,
+                    drop=None) -> DistState:
     """``plan``: a :class:`GossipPlan` / :class:`GossipSchedule` (or an int
     node count => ring) — one replica/estimate tree per shift in the plan (for
     a schedule: per shift in the union over rounds; one tree serves every
     round that uses the shift).  ``aux_dtype``: storage dtype for
     replicas/estimates (bf16 on the biggest archs — they hold reconstructed
     quantized values, so bf16 rounding is well below the quantization bin; see
-    DESIGN.md plans table)."""
+    DESIGN.md plans table).
+
+    ``drop`` (a :class:`~repro.distributed.failures.DropSpec`, rate float, or
+    ``"rate[:salt[:decay]]"`` spec; None/0 disables): failure injection.  For
+    the replica-tracking algorithms it adds one degraded-mode freshness
+    vector per union shift — keyed ``fresh{s:+d}@drop{salt}`` so restoring a
+    failure-mode checkpoint under a *different* drop salt fails loudly with a
+    KeyError instead of silently splicing failure traces."""
     sched = as_schedule(_resolve_plan(plan, topology))
     n_nodes = sched.n
+    drop = make_drop_spec(drop)
     X = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape),
                      params_single)
 
@@ -107,6 +124,9 @@ def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
     elif algo == "ecd":
         aux = {"tilde_self": aux_copy()}
         aux.update({f"tilde{s:+d}": aux_copy() for s in sched.shift_union})
+    if drop is not None and algo in ("dcd", "ecd"):
+        aux.update({fresh_key(s, drop.salt): jnp.ones((n_nodes,), jnp.float32)
+                    for s in sched.shift_union})
     return DistState(params=X, opt=opt.init(X), aux=aux,
                      step=jnp.zeros((), jnp.int32))
 
@@ -167,6 +187,7 @@ def make_dist_train_step(
     *,
     mesh: Optional[Any] = None,
     fused: Optional[bool] = None,
+    drop: Optional[Any] = None,       # DropSpec | rate | "rate[:salt[:decay]]"
     topology: Optional[str] = None,   # deprecated: use plan=make_gossip_plan(...)
 ):
     """Build ``step(state, batch) -> (state, metrics)``.
@@ -203,11 +224,33 @@ def make_dist_train_step(
     pins it).  A ``time_varying`` schedule (``exp``) instead runs ONE round
     per step — ``rounds[t % period]`` via ``lax.switch`` — so every step pays
     a single collective-permute while the effective W over a period is dense.
+
+    Failure injection: ``drop`` (a
+    :class:`~repro.distributed.failures.DropSpec`, a rate float, or a
+    ``"rate[:salt[:decay]]"`` spec string) injects deterministic per-edge
+    payload drops.  Every round, every directed edge ``i <- i-s`` keeps or
+    drops its payload by a PCG hash of ``(effective step counter, shift,
+    node, drop_salt)`` — the same counter the wire seeding uses, so the
+    failure trace is bit-reproducible and shared with the stacked
+    :class:`~repro.core.algorithms.GossipReference`.  A dropped edge's
+    contribution is zeroed and its mixing weight folded into the self weight
+    (each realized W row stays stochastic); for DCD/ECD the stale
+    replica/estimate tree is frozen (no phantom update) and its future vote
+    decays by ``drop.decay`` per missed delivery, recovering geometrically on
+    receipt.  ``drop=None`` (or rate 0) compiles the machinery out entirely —
+    the program is bit-identical to one built without the feature.  The
+    ``cpsgd`` AllReduce baseline models the reliable datacenter fabric and
+    refuses drop injection.
     """
     assert algo in ("cpsgd", "dpsgd", "naive", "dcd", "ecd")
     sched = as_schedule(_resolve_plan(plan, topology))
     rounds, n_rounds, union = sched.rounds, sched.period, sched.shift_union
+    n_nodes = sched.n
     time_varying = sched.time_varying and n_rounds > 1
+    drop = make_drop_spec(drop)
+    assert drop is None or algo != "cpsgd", \
+        "drop injection models gossip-edge failure; the cpsgd AllReduce " \
+        "baseline assumes the reliable datacenter fabric"
     if wire is not None:
         wire = make_wire_format(wire)
     use_fused = (wire is not None and wire.packed) if fused is None else bool(fused)
@@ -235,9 +278,31 @@ def make_dist_train_step(
     # ``step * period + r`` inside a multi-round step — so the stacked
     # reference reproduces the exact payload bits by chaining its own steps.
 
+    # Failure injection (drop is not None): each round first draws the
+    # per-edge delivery masks for every union shift at the round's effective
+    # counter, advances the degraded-mode freshness vectors, then (a) mixes
+    # through plan_mix_gated — gate = mask * freshness, dropped mass folded
+    # into the self weight — and (b) freezes every replica/estimate tree on
+    # its dropped edges via a post-decode select (the fused axpy kernel keeps
+    # its scalar-weight contract; the select fuses into the same pass).
+
+    def _round_masks(enc_step, shifts):
+        return {s: edge_drop_mask(n_nodes, s, enc_step, drop) for s in shifts}
+
+    def _advance_freshness(aux_d, masks):
+        for s in union:
+            fk = fresh_key(s, drop.salt)
+            aux_d[fk] = update_freshness(aux_d[fk], masks[s], drop.decay)
+        return aux_d
+
     def _dpsgd_round(rnd, enc_step, carry, upd):
         X_cur, aux_d = carry
-        X_mix = plan_mix(rnd, X_cur, {s: _roll(X_cur, s) for s in rnd.shift_list})
+        nbrs = {s: _roll(X_cur, s) for s in rnd.shift_list}
+        if drop is None:
+            X_mix = plan_mix(rnd, X_cur, nbrs)
+        else:
+            X_mix = plan_mix_gated(rnd, X_cur, nbrs,
+                                   _round_masks(enc_step, rnd.shift_list))
         if upd is not None:
             X_mix = apply_updates(X_mix, upd)
         return X_mix, aux_d
@@ -246,52 +311,78 @@ def make_dist_train_step(
         # compress the exchanged models directly — provably non-convergent
         X_cur, aux_d = carry
         tdef, payload = wire.encode_tree(X_cur, enc_step, salt=1)
-        X_mix = plan_mix(
-            rnd, wire.decode_tree(tdef, payload, X_cur),
-            {s: wire.decode_tree(tdef, _roll(payload, s), X_cur)
-             for s in rnd.shift_list})
+        dec_self = wire.decode_tree(tdef, payload, X_cur)
+        nbrs = {s: wire.decode_tree(tdef, _roll(payload, s), X_cur)
+                for s in rnd.shift_list}
+        if drop is None:
+            X_mix = plan_mix(rnd, dec_self, nbrs)
+        else:
+            X_mix = plan_mix_gated(rnd, dec_self, nbrs,
+                                   _round_masks(enc_step, rnd.shift_list))
         if upd is not None:
             X_mix = apply_updates(X_mix, upd)
         return X_mix, aux_d
 
     def _dcd_round(rnd, enc_step, carry, upd):
         X_cur, aux_d = carry
-        X_half = plan_mix(rnd, X_cur,
-                          {s: aux_d[f"rep{s:+d}"] for s in rnd.shift_list})
+        aux_d = dict(aux_d)
+        reps = {s: aux_d[f"rep{s:+d}"] for s in rnd.shift_list}
+        if drop is None:
+            masks = None
+            X_half = plan_mix(rnd, X_cur, reps)
+        else:
+            masks = _round_masks(enc_step, union)
+            aux_d = _advance_freshness(aux_d, masks)
+            gates = {s: masks[s] * aux_d[fresh_key(s, drop.salt)]
+                     for s in rnd.shift_list}
+            X_half = plan_mix_gated(rnd, X_cur, reps, gates)
         if upd is not None:
             X_half = apply_updates(X_half, upd)
         Z = jax.tree.map(lambda a, b: a - b, X_half, X_cur)
         tdef, payload = wire.encode_tree(Z, enc_step, salt=2)
         # receive side: one fused unpack+dequant+axpy kernel per leaf; every
         # union replica advances with the rolled payload so rep{s} keeps
-        # tracking roll(X, s) through every round
-        aux_d = dict(aux_d)
+        # tracking roll(X, s) through every round (under drops: through every
+        # *delivered* round — a dropped edge freezes the replica)
         X_cur = dec_axpy(tdef, payload, X_cur, 1.0)
         for s in union:
-            aux_d[f"rep{s:+d}"] = dec_axpy(
-                tdef, _roll(payload, s), aux_d[f"rep{s:+d}"], 1.0)
+            rep = dec_axpy(tdef, _roll(payload, s), aux_d[f"rep{s:+d}"], 1.0)
+            if masks is not None:
+                rep = select_delivered(masks[s], rep, aux_d[f"rep{s:+d}"])
+            aux_d[f"rep{s:+d}"] = rep
         return X_cur, aux_d
 
     def _ecd_round(rnd, enc_step, carry, upd):
         X_cur, aux_d = carry
+        aux_d = dict(aux_d)
         s_t = (enc_step + 1).astype(jnp.float32)
-        X_mix = plan_mix(rnd, aux_d["tilde_self"],
-                         {s: aux_d[f"tilde{s:+d}"] for s in rnd.shift_list})
+        tildes = {s: aux_d[f"tilde{s:+d}"] for s in rnd.shift_list}
+        if drop is None:
+            masks = None
+            X_mix = plan_mix(rnd, aux_d["tilde_self"], tildes)
+        else:
+            masks = _round_masks(enc_step, union)
+            aux_d = _advance_freshness(aux_d, masks)
+            gates = {s: masks[s] * aux_d[fresh_key(s, drop.salt)]
+                     for s in rnd.shift_list}
+            X_mix = plan_mix_gated(rnd, aux_d["tilde_self"], tildes, gates)
         X_next = apply_updates(X_mix, upd) if upd is not None else X_mix
         Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s_t) * a + 0.5 * s_t * b,
                          X_cur, X_next)
         tdef, payload = wire.encode_tree(Z, enc_step, salt=3)
-        decay = 1.0 - 2.0 / s_t
+        est_decay = 1.0 - 2.0 / s_t
         blend = 2.0 / s_t
-        # decay*tilde + blend*decode in ONE fused pass per leaf: the decay
+        # est_decay*tilde + blend*decode in ONE fused pass per leaf: the decay
         # scale rides the kernel's acc_weight operand, so no pre-scaled
         # f32 accumulator is ever written to HBM
-        aux_d = dict(aux_d)
         aux_d["tilde_self"] = dec_axpy(tdef, payload, aux_d["tilde_self"],
-                                       blend, decay)
+                                       blend, est_decay)
         for s in union:
-            aux_d[f"tilde{s:+d}"] = dec_axpy(tdef, _roll(payload, s),
-                                             aux_d[f"tilde{s:+d}"], blend, decay)
+            est = dec_axpy(tdef, _roll(payload, s), aux_d[f"tilde{s:+d}"],
+                           blend, est_decay)
+            if masks is not None:
+                est = select_delivered(masks[s], est, aux_d[f"tilde{s:+d}"])
+            aux_d[f"tilde{s:+d}"] = est
         return X_next, aux_d
 
     round_fn = {"dpsgd": _dpsgd_round, "naive": _naive_round,

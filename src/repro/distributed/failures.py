@@ -1,0 +1,139 @@
+"""Deterministic failure injection for the gossip runtime.
+
+Real slow networks drop packets; the sharded runtime's only communication
+primitive — ``jnp.roll`` on the node axis — always "arrives".  This module
+makes failure a *modeled, reproducible input* instead of an impossibility:
+
+* :class:`DropSpec` — the failure configuration (drop rate, drop salt,
+  degraded-mode decay), parsed from CLI strings by :func:`make_drop_spec`.
+* :func:`edge_drop_mask` — the per-edge Bernoulli keep/drop decision for one
+  gossip round: a PCG hash of ``(step, round, shift, node, drop_salt)`` riding
+  the same counter-based seeding the wire formats use for stochastic rounding
+  (``round`` is folded into the effective encode counter exactly like the
+  multi-round wire seeding, so a schedule's rounds draw independent masks).
+  The mask is a pure function of static config + the traced step counter:
+  key-free, bit-reproducible, and therefore shared verbatim by the sharded
+  runtime, the stacked reference (:class:`repro.core.algorithms.GossipReference`)
+  and netsim traces — all three see the *same* failure trace.
+
+The mask is directed: ``edge_drop_mask(...)[i] == 0`` means the payload rolled
+by ``shift`` did not reach node ``i`` this round.  The runtime then
+
+* zeroes the neighbor's contribution and folds the dropped mixing weight into
+  the self-weight (row-stochastic renormalization — see
+  :func:`repro.distributed.gossip.plan_mix_gated`), and
+* for the replica-tracking algorithms (DCD/ECD), **freezes** the stale
+  replica/estimate tree (no phantom update from a payload that never arrived)
+  and **decays** its mixing weight by ``DropSpec.decay`` per missed delivery
+  (:func:`update_freshness`) — a replica that missed a delta carries a stale
+  offset, so its vote shrinks until a successful receipt restores it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import uniform_from_hash
+
+# Stream constant separating the drop-mask hash stream from the wire formats'
+# (step, salt, leaf) stochastic-rounding stream (same PCG core, disjoint use).
+_DROP_STREAM = 0x9E3779B9
+
+
+@dataclasses.dataclass(frozen=True)
+class DropSpec:
+    """Failure-injection configuration.
+
+    ``rate``: per-edge per-round drop probability, in [0, 1).
+    ``salt``: drop-mask salt — two runs with equal salts replay the exact same
+    failure trace; different salts draw independent traces.  Restoring a
+    checkpointed DCD/ECD run under a different salt is refused (the degraded
+    aux keys embed the salt — see ``init_dist_state``).
+    ``decay``: degraded-mode weight decay per missed delivery for stale
+    DCD/ECD replica trees (1.0 = freeze only, no decay).
+    """
+
+    rate: float
+    salt: int = 0
+    decay: float = 0.5
+
+    def __post_init__(self):
+        assert 0.0 <= self.rate < 1.0, f"drop rate must be in [0, 1), got {self.rate}"
+        assert 0.0 < self.decay <= 1.0, f"decay must be in (0, 1], got {self.decay}"
+
+    @property
+    def enabled(self) -> bool:
+        return self.rate > 0.0
+
+    def describe(self) -> str:
+        return f"drop={self.rate:g}@salt{self.salt}(decay={self.decay:g})"
+
+
+def make_drop_spec(spec: Union[None, DropSpec, float, str],
+                   salt: int = 0, decay: float = 0.5) -> Optional[DropSpec]:
+    """Normalize a drop spec: ``None`` | :class:`DropSpec` | float rate |
+    ``"rate[:salt[:decay]]"`` string.  A zero rate normalizes to ``None`` so
+    callers can statically compile the failure machinery out — the
+    ``drop_rate=0`` program is bit-identical to a run built without it."""
+    if spec is None:
+        return None
+    if isinstance(spec, DropSpec):
+        return spec if spec.enabled else None
+    if isinstance(spec, str):
+        parts = spec.split(":")
+        out = DropSpec(rate=float(parts[0]),
+                       salt=int(parts[1]) if len(parts) > 1 else salt,
+                       decay=float(parts[2]) if len(parts) > 2 else decay)
+    else:
+        out = DropSpec(rate=float(spec), salt=salt, decay=decay)
+    return out if out.enabled else None
+
+
+def edge_drop_mask(n: int, shift: int, step, drop: DropSpec) -> jax.Array:
+    """(n,) float32 delivery mask for the directed edges ``i <- (i - shift)``
+    at effective round counter ``step``: 1.0 = payload delivered, 0.0 =
+    dropped.  Deterministic PCG draw — same ``(n, shift, step, salt)`` always
+    yields the same mask, on every backend, with no PRNG key threading."""
+    step = jnp.asarray(step).astype(jnp.uint32)
+    seed = step * jnp.uint32(2654435761) ^ jnp.uint32(
+        (drop.salt * 747796405 + _DROP_STREAM) & 0xFFFFFFFF)
+    # distinct counters per (node, shift): shifts are canonical in (-n/2, n/2]
+    # so ``shift % n`` enumerates them without collisions
+    idx = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(shift % n) * jnp.uint32(n)
+    u = uniform_from_hash(idx, seed)
+    return (u >= jnp.float32(drop.rate)).astype(jnp.float32)
+
+
+def update_freshness(fresh: jax.Array, mask: jax.Array, decay: float) -> jax.Array:
+    """Degraded-mode freshness of a replica tree, per node: a missed delivery
+    multiplies the replica's vote by ``decay``; a successful receipt recovers
+    it at the same geometric rate (capped at 1) — the stale offset a missed
+    compressed delta leaves behind is never resent, but each received delta
+    re-anchors the replica, so trust returns as fast as it was withdrawn."""
+    recovered = jnp.minimum(1.0, fresh * (1.0 / decay))
+    return mask * recovered + (1.0 - mask) * (decay * fresh)
+
+
+def select_delivered(mask: jax.Array, delivered: Any, frozen: Any) -> Any:
+    """Treewise ``where``: per-node choice between the post-receive tree and
+    the frozen pre-round tree, the (n,) mask broadcast over every leaf's
+    trailing dims.  This is how a dropped edge's replica "sees no phantom
+    update": the decode/axpy result is simply not selected for that node."""
+    keep = mask.astype(bool)
+
+    def one(new, old):
+        m = keep.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return jax.tree.map(one, delivered, frozen)
+
+
+def fresh_key(shift: int, salt: int) -> str:
+    """Aux-dict key of the degraded-mode freshness tree for one union shift.
+    The drop salt is embedded in the name on purpose: restoring a failure-mode
+    checkpoint under a different drop salt must fail loudly (KeyError) rather
+    than silently splicing one failure trace's degraded state into another's."""
+    return f"fresh{shift:+d}@drop{salt}"

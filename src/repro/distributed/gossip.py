@@ -361,16 +361,29 @@ class GossipSchedule:
         collective-permute per step (D-PSGD; DCD/ECD pay
         :attr:`replica_payloads` = log2 n payload rolls) — and the effective
         W over a period is exactly ``J/n``.  Exact averaging needs ``n`` to be a power of two
-        (Ying et al. 2021); other n should use ``full_logn``'s mixed-radix
-        rounds, which are exact for every n."""
+        (Ying et al. 2021); other n should use :meth:`exp_any` (round-robin
+        mixed-radix rounds, exact for every n at 1..d-1 shifts per step) or
+        ``full_logn``."""
         if n < 2 or n & (n - 1):
             raise ValueError(
                 f"exp needs a power-of-two node count for exact averaging, "
-                f"got {n}; use full_logn (mixed-radix, exact for any n) "
-                "instead")
+                f"got {n}; use exp_any (round-robin mixed-radix, exact for "
+                "any n) or full_logn instead")
         sched = cls.averaging(n, name="exp", time_varying=True)
         assert all(r.degree == 1 for r in sched.rounds)
         return sched
+
+    @classmethod
+    def exp_any(cls, n: int) -> "GossipSchedule":
+        """General-n round-robin one-peer(ish) schedule: the mixed-radix
+        dimension-exchange rounds of :meth:`averaging`, cycled one round per
+        *step* (``time_varying=True``).  Step ``t`` pays only round
+        ``t % period``'s shifts — one shift for each radix-2 round, ``d - 1``
+        for a radix-``d`` round (n=6: alternating 1 and 2 shifts/step) — and
+        the effective W over a full period is *exactly* ``J/n`` for every n,
+        not just powers of two.  At ``n = 2^m`` this IS :meth:`exp` (all
+        rounds degree 1) under another name."""
+        return cls.averaging(n, name="exp_any", time_varying=True)
 
     @classmethod
     def from_mixing_matrix(cls, W: np.ndarray, *, name: str = "custom",
@@ -439,18 +452,21 @@ def _named(name: str) -> Callable[[int], GossipPlan]:
     if name == "exp":
         # time-varying one-peer exponential graph: one permute per step
         return GossipSchedule.exp
+    if name == "exp_any":
+        # round-robin mixed-radix rounds: exact J/n per period for ANY n
+        return GossipSchedule.exp_any
     ctor = {"ring": GossipPlan.ring, "chain": GossipPlan.chain,
             "torus": GossipPlan.torus}.get(name)
     if ctor is None:
         raise ValueError(
             f"unknown gossip topology {name!r}; known: "
-            "ring, chain, torus, torus2d, star, full, full_logn, exp — or "
-            "pass a GossipPlan / GossipSchedule / mixing matrix")
+            "ring, chain, torus, torus2d, star, full, full_logn, exp, "
+            "exp_any — or pass a GossipPlan / GossipSchedule / mixing matrix")
     return ctor
 
 
 GOSSIP_TOPOLOGIES = ("ring", "chain", "torus", "torus2d", "star", "full",
-                     "full_logn", "exp")
+                     "full_logn", "exp", "exp_any")
 
 
 def make_gossip_plan(spec, n: Optional[int] = None):
@@ -499,3 +515,60 @@ def plan_mix(plan: GossipPlan, x: Any, neighbors: Dict[int, Any]) -> Any:
         out = jax.tree.map(lambda a, b: a + _weight_for(w, b) * b,
                            out, neighbors[s])
     return out
+
+
+def gated_weights(plan: GossipPlan, gates: Dict[int, jax.Array]
+                  ) -> Tuple[jax.Array, Dict[int, jax.Array]]:
+    """Realize one round's mixing weights under per-edge delivery gates.
+
+    ``gates[s]`` is the (n,) effective delivery gate for shift ``s`` in
+    [0, 1] — 0 where the edge dropped this round, possibly fractional where a
+    degraded-mode freshness decay shrinks a stale replica's vote.  Returns
+    ``(self_w, {s: w_s})`` as (n,) float32 vectors with the renormalization
+    rule applied: every unit of gated-away neighbor weight lands on the self
+    weight, so each realized row of W still sums to exactly 1 (the realized
+    per-round mixing matrix stays row-stochastic — see
+    :func:`realized_mixing_matrix`)."""
+    ones = jnp.ones((plan.n,), jnp.float32)
+    self_w = ones * jnp.asarray(plan.self_weight, jnp.float32)
+    out: Dict[int, jax.Array] = {}
+    for s, w in plan.shifts:
+        wv = ones * jnp.asarray(w, jnp.float32)
+        g = jnp.asarray(gates[s], jnp.float32)
+        out[s] = wv * g
+        self_w = self_w + wv * (1.0 - g)
+    return self_w, out
+
+
+def plan_mix_gated(plan: GossipPlan, x: Any, neighbors: Dict[int, Any],
+                   gates: Dict[int, jax.Array]) -> Any:
+    """:func:`plan_mix` under per-edge delivery gates: dropped (or degraded)
+    neighbor contributions are zeroed/shrunk and the lost mass is absorbed by
+    the self weight via :func:`gated_weights` — the on-the-fly row-stochastic
+    renormalization of the failure-injection tentpole."""
+    self_w, w_gated = gated_weights(plan, gates)
+
+    def bcast(v, leaf):
+        return v.astype(leaf.dtype).reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+    out = jax.tree.map(lambda l: bcast(self_w, l) * l, x)
+    for s in plan.shift_list:
+        out = jax.tree.map(lambda a, b: a + bcast(w_gated[s], b) * b,
+                           out, neighbors[s])
+    return out
+
+
+def realized_mixing_matrix(plan: GossipPlan, gates: Dict[int, jax.Array]
+                           ) -> jax.Array:
+    """The dense (n, n) mixing matrix one gated round actually applies —
+    ``diag(self + sum_s w_s (1 - g_s))`` plus ``w_s g_s`` on the roll
+    diagonals.  Row sums are exactly 1 by construction; the failure test tier
+    pins this to 1e-12 for random masks."""
+    self_w, w_gated = gated_weights(plan, gates)
+    n = plan.n
+    rows = jnp.arange(n)
+    W = jnp.zeros((n, n), jnp.float32).at[rows, rows].set(self_w)
+    for s in plan.shift_list:
+        # roll(X, s)[i] = X[(i - s) % n]  =>  gated weight lands on col i - s
+        W = W.at[rows, (rows - s) % n].add(w_gated[s])
+    return W

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed.decentralized import init_dist_state, make_dist_train_step
+from repro.distributed.failures import make_drop_spec
 from repro.distributed.gossip import GOSSIP_TOPOLOGIES, make_gossip_plan
 from repro.distributed.plans import SERVE_PLANS, TRAIN_PLANS
 from repro.distributed.sharding import (
@@ -76,6 +77,40 @@ def _gossip_record(gossip, algo: str) -> Dict[str, Any]:
     }
 
 
+def _failure_record(codec, gossip, algo: str, p_sds, drop,
+                    straggler: float) -> Dict[str, Any]:
+    """Netsim failure figures for the dryrun record: expected delivered
+    payloads under the drop rate, plus the comm-time tail and the
+    epoch-time-vs-straggler curve of the low-precision decentralized strategy
+    on the measured wire bits (point model when both knobs are zero)."""
+    if drop is None and straggler == 0.0:
+        return {}
+    from repro.netsim import (
+        BEST_NETWORK, LinkModel, comm_time_tail, expected_payloads,
+        straggler_curve, strategies_for,
+    )
+    rate = drop.rate if drop is not None else 0.0
+    payloads = gossip.replica_payloads if algo in ("dcd", "ecd") else gossip.degree
+    rec: Dict[str, Any] = {
+        "drop_rate": rate,
+        "drop_salt": drop.salt if drop is not None else 0,
+        "expected_payloads": expected_payloads(float(payloads), rate),
+    }
+    if codec is not None:
+        model_bytes = 4.0 * _tree_size(p_sds)
+        strat = strategies_for(model_bytes, gossip.n, codec, plan=gossip,
+                               drop_rate=rate)["decentralized_lp"]
+        link = LinkModel.from_condition(BEST_NETWORK, straggler=straggler,
+                                        drop_rate=rate)
+        rec["comm_tail_s"] = comm_time_tail(strat, link, n_edges=gossip.degree)
+        if straggler > 0.0:
+            rec["straggler_curve"] = straggler_curve(
+                strat, BEST_NETWORK, compute_s=0.0, iters_per_epoch=1,
+                n_edges=gossip.degree,
+                sigmas=(0.0, straggler / 2, straggler, 2 * straggler))
+    return rec
+
+
 def _state_shardings(state_sds, mesh, n_routed):
     """Shardings for the full DistState: param-like trees stacked over node."""
     def shard_tree(tree):
@@ -96,7 +131,8 @@ def _state_shardings(state_sds, mesh, n_routed):
 
 def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dcd",
                  wire: str = "quant:8", topology: str = "ring",
-                 momentum: float = 0.0) -> Dict[str, Any]:
+                 momentum: float = 0.0, drop_rate: float = 0.0,
+                 drop_salt: int = 0, straggler: float = 0.0) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     plan = TRAIN_PLANS[arch]
@@ -113,14 +149,16 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
     # mesh is multi-axis (node, fsdp, model): the step falls back from the
     # shard_map-fused decode to the sharding-preserving reference path (see
     # _make_decode_axpy) — the wire payload is identical either way
+    drop = make_drop_spec(drop_rate, salt=drop_salt)
     step = make_dist_train_step(loss_fn, algo, opt, codec, gossip, constant(1e-2),
-                                mesh=mesh)
+                                mesh=mesh, drop=drop)
 
     import jax.numpy as _jnp
     aux_dtype = _jnp.bfloat16 if plan.aux_dtype == "bfloat16" else None
     p_sds = params_specs(cfg)
     state_sds = jax.eval_shape(
-        lambda ps: init_dist_state(algo, ps, gossip, opt, aux_dtype=aux_dtype),
+        lambda ps: init_dist_state(algo, ps, gossip, opt, aux_dtype=aux_dtype,
+                                   drop=drop),
         p_sds)
     batch_sds = train_input_specs(cfg, shape, n)
 
@@ -137,9 +175,11 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
         t2 = time.time()
     print(compiled.memory_analysis())   # proves it fits
     print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
-    return _train_record(arch, shape_name, shape, algo, wire, codec, gossip,
-                         multi_pod, n, n_chips, cfg, p_sds, state_sds,
-                         batch_sds, step, compiled, t0, t1, t2)
+    rec = _train_record(arch, shape_name, shape, algo, wire, codec, gossip,
+                        multi_pod, n, n_chips, cfg, p_sds, state_sds,
+                        batch_sds, step, compiled, t0, t1, t2)
+    rec.update(_failure_record(codec, gossip, algo, p_sds, drop, straggler))
+    return rec
 
 
 def _train_record(arch, shape_name, shape, algo, wire, codec, gossip, multi_pod,
@@ -252,17 +292,21 @@ def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool) -> Dict[str, An
 
 
 def dryrun(arch: str, shape_name: str, *, multi_pod: bool = False, algo: str = "dcd",
-           wire: str = "quant:8", topology: str = "ring") -> Dict[str, Any]:
+           wire: str = "quant:8", topology: str = "ring",
+           drop_rate: float = 0.0, drop_salt: int = 0,
+           straggler: float = 0.0) -> Dict[str, Any]:
     shape = SHAPES[shape_name]
     if shape.kind == "train":
         return dryrun_train(arch, shape_name, multi_pod=multi_pod, algo=algo,
-                            wire=wire, topology=topology)
+                            wire=wire, topology=topology, drop_rate=drop_rate,
+                            drop_salt=drop_salt, straggler=straggler)
     return dryrun_serve(arch, shape_name, multi_pod=multi_pod)
 
 
 def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
                  wire: str = "quant:8", topology: str = "ring",
-                 steps: int = 2) -> Dict[str, Any]:
+                 steps: int = 2, drop_rate: float = 0.0, drop_salt: int = 0,
+                 straggler: float = 0.0) -> Dict[str, Any]:
     """Host-backend smoke: the dryrun machinery end to end on a reduced config
     and a small forced-device mesh (REPRO_DRYRUN_DEVICES=8), then *execute*
     ``steps`` real steps of the compiled program — the demo surface CI runs so
@@ -279,12 +323,14 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
     opt = sgd()
     gossip = make_gossip_plan(topology, n)
     codec = make_wire_format(wire) if algo in ("naive", "dcd", "ecd") else None
+    drop = make_drop_spec(drop_rate, salt=drop_salt)
     step = make_dist_train_step(lambda p, b: model.loss(p, b, remat=True),
                                 algo, opt, codec, gossip, constant(1e-2),
-                                mesh=None)
+                                mesh=None, drop=drop)
     shape = InputShape("tiny", "train", 64, 2 * n)
     p_sds = params_specs(cfg)
-    state_sds = jax.eval_shape(lambda ps: init_dist_state(algo, ps, gossip, opt), p_sds)
+    state_sds = jax.eval_shape(
+        lambda ps: init_dist_state(algo, ps, gossip, opt, drop=drop), p_sds)
     batch_sds = train_input_specs(cfg, shape, n)
     ssh = _state_shardings(state_sds, mesh, cfg.moe.n_routed if cfg.moe else None)
     bsh = batch_shardings(batch_sds, mesh, node_axis=True)
@@ -294,7 +340,7 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
                            out_shardings=(ssh, None)).lower(state_sds, batch_sds).compile()
         t1 = time.time()
         params0 = model.init(jax.random.key(0))
-        state = init_dist_state(algo, params0, gossip, opt)
+        state = init_dist_state(algo, params0, gossip, opt, drop=drop)
         batch = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), batch_sds)
         for _ in range(steps):
             state, metrics = compiled(state, batch)
@@ -304,6 +350,7 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
         "n_devices": int(devs.size), "compile_s": round(t1 - t0, 1),
         "steps": steps, "loss": float(metrics["loss"]),
     }
+    rec.update(_failure_record(codec, gossip, algo, p_sds, drop, straggler))
     if codec is not None:
         payload_bytes = codec.wire_nbytes(state_sds.params)
         rec["wire_bits_per_element"] = round(
@@ -324,6 +371,14 @@ def main():
                     help="gossip wire-format spec for make_wire_format, e.g. "
                          "quant:8, quant:4:block=1024, sparse:0.25:topk, fp16")
     ap.add_argument("--topology", default="ring", choices=list(GOSSIP_TOPOLOGIES))
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="per-edge per-round gossip drop probability (0 = "
+                         "reliable fabric, the pre-failure-injection program)")
+    ap.add_argument("--drop-salt", type=int, default=0,
+                    help="stream salt for the deterministic PCG drop mask")
+    ap.add_argument("--straggler", type=float, default=0.0,
+                    help="lognormal sigma for per-edge straggler jitter in the "
+                         "netsim figures (comm tail + epoch-vs-sigma curve)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced-config host-backend smoke: compile + run 2 "
                          "steps on REPRO_DRYRUN_DEVICES (set it to 8)")
@@ -333,7 +388,8 @@ def main():
     if args.smoke:
         arch = (args.arch or ["granite-3-2b"])[0]
         rec = dryrun_smoke(arch, algo=args.algo, wire=args.wire,
-                           topology=args.topology)
+                           topology=args.topology, drop_rate=args.drop_rate,
+                           drop_salt=args.drop_salt, straggler=args.straggler)
         if args.json:
             with open(args.json, "a") as f:
                 f.write(json.dumps(rec) + "\n")
@@ -348,7 +404,8 @@ def main():
             try:
                 rec = dryrun(arch, shape, multi_pod=args.multi_pod,
                              algo=args.algo, wire=args.wire,
-                             topology=args.topology)
+                             topology=args.topology, drop_rate=args.drop_rate,
+                             drop_salt=args.drop_salt, straggler=args.straggler)
                 print(f"[OK] {key}: bottleneck={rec['bottleneck']} "
                       f"t=({rec['t_compute_s']:.2e},{rec['t_memory_s']:.2e},"
                       f"{rec['t_collective_s']:.2e})s "

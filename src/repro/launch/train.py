@@ -32,6 +32,7 @@ from repro.distributed.decentralized import (
     init_dist_state,
     make_dist_train_step,
 )
+from repro.distributed.failures import make_drop_spec
 from repro.distributed.gossip import make_gossip_plan
 from repro.distributed.wire import make_wire_format
 from repro.models.api import build_model
@@ -52,6 +53,8 @@ class TrainConfig:
     lr: float = 3e-3
     warmup: int = 20
     optimizer: str = "adamw"
+    drop_rate: float = 0.0              # per-edge gossip drop probability (0 = reliable)
+    drop_salt: int = 0                  # stream salt for the deterministic drop mask
     seed: int = 0
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 100
@@ -65,11 +68,13 @@ def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
     plan = make_gossip_plan(tc.topology, tc.n_nodes)
     wire = make_wire_format(tc.wire) if tc.algo in ("naive", "dcd", "ecd") else None
     sched = linear_warmup_cosine(tc.lr, tc.warmup, tc.steps)
+    drop = make_drop_spec(tc.drop_rate, salt=tc.drop_salt)
     loss_fn = lambda p, b: model.loss(p, b)
-    step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, wire, plan, sched))
+    step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, wire, plan, sched,
+                                           drop=drop))
 
     params0 = model.init(jax.random.key(tc.seed))
-    state = init_dist_state(tc.algo, params0, plan, opt)
+    state = init_dist_state(tc.algo, params0, plan, opt, drop=drop)
 
     dc = DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len, global_batch=tc.global_batch,
                     n_shards=tc.n_nodes, seed=tc.seed)

@@ -1,5 +1,6 @@
 from repro.netsim.cost_model import (
     BEST_NETWORK, HIGH_LAT, LOW_BW, WORST,
-    CommStrategy, NetworkCondition, comm_time, epoch_time, iter_time, strategies,
-    strategies_for,
+    CommStrategy, LinkModel, NetworkCondition, comm_time, comm_time_tail,
+    epoch_time, expected_payloads, failure_trace, iter_time,
+    sample_comm_times, straggler_curve, strategies, strategies_for,
 )

@@ -116,3 +116,68 @@ def test_checkpoint_rejects_missing_plan_aux():
                                      make_gossip_plan("torus", n), sgd())
         with pytest.raises(KeyError, match="rep"):
             restore(tmp, torus_like, 1)
+
+
+def test_dist_state_checkpoint_roundtrip_failure_state(tmp_path):
+    """Satellite acceptance: a degraded-mode DistState — drop-salted freshness
+    trees riding alongside the union-keyed replica trees — round-trips
+    bit-exactly, and a resumed run continues the exact degraded multi-round
+    trajectory (both the wire seeds AND the drop masks are pure functions of
+    the restored step counter, so the failure trace replays identically)."""
+    from repro.distributed.failures import fresh_key, make_drop_spec
+
+    n, d = 8, 32
+    sched = make_gossip_plan("full_logn", n)
+    drop = make_drop_spec("0.3:5:0.5")
+    opt = adamw()
+    step = jax.jit(make_dist_train_step(_toy_loss, "dcd", opt,
+                                        QuantWire(bits=4, block=128), sched,
+                                        constant(0.05), drop=drop))
+    state = init_dist_state("dcd", jnp.zeros((d,)), sched, opt, drop=drop)
+    assert set(state.aux) == {f"rep{s:+d}" for s in sched.shift_union} | \
+        {fresh_key(s, 5) for s in sched.shift_union}
+    for t in range(3):
+        state, _ = step(state, _toy_batch(jax.random.key(t), n, d=d))
+    # the degraded run actually degraded something: freshness left 1.0
+    assert any(float(np.min(np.asarray(state.aux[fresh_key(s, 5)]))) < 1.0
+               for s in sched.shift_union)
+
+    ckpt = str(tmp_path / "ckpt")
+    save(ckpt, 3, state, metadata={"drop": drop.describe()})
+    restored, manifest = restore(
+        ckpt, init_dist_state("dcd", jnp.zeros((d,)), sched, opt, drop=drop), 3)
+    assert manifest["metadata"]["drop"] == drop.describe()
+    _assert_state_equal(state, restored)
+    for t in (99, 100):
+        batch = _toy_batch(jax.random.key(t), n, d=d)
+        state, _ = step(state, batch)
+        restored, _ = step(restored, batch)
+    _assert_state_equal(state, restored)
+
+
+def test_checkpoint_rejects_mismatched_drop_salt():
+    """Satellite acceptance: restoring a drop-salted checkpoint into a state
+    built with a DIFFERENT drop salt fails loudly — the freshness aux keys
+    embed the salt (``fresh+1@drop5``), so resuming under a different failure
+    stream cannot silently decouple the freshness trees from the masks that
+    produced them.  (The converse — resuming WITHOUT drops from a degraded
+    checkpoint — legitimately drops the freshness trees: restore fills the
+    ``like`` structure, and a no-drop state simply has no freshness leaves.)"""
+    import tempfile
+
+    from repro.distributed.failures import make_drop_spec
+
+    n, d = 8, 8
+    state = init_dist_state("dcd", jnp.zeros((d,)), n, sgd(),
+                            drop=make_drop_spec("0.2:5"))
+    with tempfile.TemporaryDirectory() as tmp:
+        save(tmp, 1, state)
+        other_salt = init_dist_state("dcd", jnp.zeros((d,)), n, sgd(),
+                                     drop=make_drop_spec("0.2:9"))
+        with pytest.raises(KeyError, match="fresh"):
+            restore(tmp, other_salt, 1)
+        # and a degraded-shaped state refuses an undegraded checkpoint: the
+        # freshness leaves it expects simply are not there
+        save(tmp, 2, init_dist_state("dcd", jnp.zeros((d,)), n, sgd()))
+        with pytest.raises(KeyError, match="fresh"):
+            restore(tmp, other_salt, 2)

@@ -380,3 +380,47 @@ def test_deprecated_spellings_warn_exactly_once():
         dd.make_dist_train_step(loss, "dcd", sgd(), QuantWire(bits=8, block=128),
                                 16, constant(0.05), topology="torus")
     assert len(deprecations(rec)) == 1
+
+
+# ------------------------------------------------------------ exp_any tier
+
+@pytest.mark.parametrize("n", [6, 12])
+def test_exp_any_schedule_equivalence_general_n(n):
+    """Satellite acceptance: exp_any cycles the mixed-radix averaging rounds
+    one per training step for ANY n — the per-period round product is exactly
+    J/n (1e-12), each round is doubly stochastic, and the per-step cost is one
+    round (not the whole factorization, which per-step full_logn pays)."""
+    e = make_gossip_plan("exp_any", n)
+    assert isinstance(e, GossipSchedule) and e.time_varying
+    base = GossipSchedule.averaging(n)
+    assert e.period == base.period and e.round_degrees == base.round_degrees
+    np.testing.assert_allclose(e.effective_mixing_matrix(),
+                               topo.fully_connected(n), atol=1e-12)
+    prod = np.eye(n)
+    for r in e.rounds:
+        M = r.mixing_matrix()
+        np.testing.assert_allclose(M.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-12)
+        assert (M >= 0).all()
+        prod = M @ prod
+    np.testing.assert_allclose(prod, topo.fully_connected(n), atol=1e-12)
+    # per-STEP payload accounting matches exp's: degree = max round degree,
+    # replica payloads = |union| (one aux tree per union shift)
+    assert e.degree == max(e.round_degrees)
+    assert e.replica_payloads == len(e.shift_union)
+
+
+def test_exp_any_equals_exp_at_powers_of_two():
+    """At n = 2^k the mixed-radix rounds ARE the hypercube dimension exchange:
+    exp_any and exp cycle identical one-peer rounds; where exp refuses a
+    non-power-of-two, exp_any is the general answer."""
+    e_any = make_gossip_plan("exp_any", 8)
+    e_pow = make_gossip_plan("exp", 8)
+    assert e_any.period == e_pow.period == 3
+    assert e_any.shift_union == e_pow.shift_union == (1, 2, 4)
+    for a, b in zip(e_any.rounds, e_pow.rounds):
+        np.testing.assert_allclose(a.mixing_matrix(), b.mixing_matrix(),
+                                   atol=1e-12)
+    with pytest.raises(ValueError, match="power-of-two"):
+        make_gossip_plan("exp", 6)
+    assert make_gossip_plan("exp_any", 6).period == 2    # radix 2 * 3

@@ -230,3 +230,109 @@ def test_strategies_for_accepts_wire_format_directly():
     wire = make_wire_format("quant:4:1024")
     lp = strategies_for(RESNET20_BYTES, 8, wire)["decentralized_lp"]
     assert lp.bytes_per_iter == pytest.approx(2 * RESNET20_BYTES * 4.03125 / 32)
+
+
+# ------------------------------------------------------- failure realism
+
+def test_strategies_for_drop_rate_scales_expected_gossip_bytes():
+    """Satellite acceptance: drop_rate scales the EXPECTED decentralized
+    payload bytes by (1 - rate) — the per-edge masks deliver each payload
+    independently — while latency rounds (the barrier is still synchronous)
+    and the AllReduce baselines (reliable fabric) are untouched.  rate 0 is
+    bit-identical to the undropped figures."""
+    from repro.distributed.wire import make_wire_format
+    from repro.netsim import expected_payloads, strategies_for
+
+    M, n = RESNET20_BYTES, 8
+    wire = make_wire_format("quant:8:1024")
+    base = strategies_for(M, n, wire)
+    zero = strategies_for(M, n, wire, drop_rate=0.0)
+    for k in base:
+        assert zero[k].bytes_per_iter == base[k].bytes_per_iter, k
+        assert zero[k].latency_rounds == base[k].latency_rounds, k
+    dropped = strategies_for(M, n, wire, drop_rate=0.2)
+    for k in ("decentralized_fp", "decentralized_lp"):
+        assert dropped[k].bytes_per_iter == \
+            pytest.approx(0.8 * base[k].bytes_per_iter)
+        assert dropped[k].latency_rounds == base[k].latency_rounds
+    for k in ("allreduce", "allreduce_lp"):
+        assert dropped[k].bytes_per_iter == base[k].bytes_per_iter
+    assert expected_payloads(2, 0.25) == pytest.approx(1.5)
+    assert expected_payloads(4) == 4.0
+
+
+def test_ring_figures_at_drop_zero_bit_identical_to_seed_model():
+    """Satellite acceptance: the drop_rate=0.0 spelling of strategies_for
+    reproduces the seed cost model's ring figures bit for bit — the failure
+    knobs ride along without perturbing a single undropped number."""
+    from repro.distributed.gossip import make_gossip_plan
+    from repro.distributed.wire import make_wire_format
+    from repro.netsim import strategies_for
+
+    M, n = RESNET20_BYTES, 8
+    wire = make_wire_format("quant:8:1024")
+    seed = strategies(M, n, wire_bits=wire.wire_bits_per_element())
+    got = strategies_for(M, n, wire, plan=make_gossip_plan("ring", n),
+                         drop_rate=0.0)
+    for k in seed:
+        assert got[k].bytes_per_iter == seed[k].bytes_per_iter, k
+        assert got[k].latency_rounds == seed[k].latency_rounds, k
+
+
+def test_sample_comm_times_straggler_zero_collapses_to_point_model():
+    """LinkModel with straggler=0 is the deterministic seed model: every
+    sample equals comm_time of the median condition exactly."""
+    import numpy as np
+
+    from repro.netsim import LinkModel, sample_comm_times
+
+    s = strategies(RESNET20_BYTES, 8)["decentralized_lp"]
+    link = LinkModel.from_condition(HIGH_LAT)
+    t = sample_comm_times(s, link, n_edges=2, n_samples=64)
+    assert t.shape == (64,)
+    assert (t == comm_time(s, HIGH_LAT)).all()
+    assert link.condition() == HIGH_LAT
+
+
+def test_comm_time_tail_grows_with_sigma_and_inflight_edges():
+    """The straggler tail bites through the synchronous round barrier: p95
+    grows with sigma, and with the number of in-flight edges the round max
+    runs over; sampling is deterministic in the seed."""
+    import numpy as np
+
+    from repro.netsim import LinkModel, comm_time_tail, sample_comm_times
+
+    s = strategies(RESNET20_BYTES, 8)["decentralized_fp"]
+    point = comm_time(s, HIGH_LAT)
+    tails = [comm_time_tail(s, LinkModel.from_condition(HIGH_LAT, straggler=sig),
+                            n_edges=2) for sig in (0.25, 0.5, 1.0)]
+    for tail in tails:
+        assert tail["p95"] > tail["p50"]
+        assert tail["mean"] > point        # E[max of lognormals] > median
+    assert tails[0]["p95"] < tails[1]["p95"] < tails[2]["p95"]
+
+    link = LinkModel.from_condition(HIGH_LAT, straggler=0.5)
+    more_edges = comm_time_tail(s, link, n_edges=8)
+    assert more_edges["mean"] > comm_time_tail(s, link, n_edges=2)["mean"]
+    a = sample_comm_times(s, link, n_edges=2, seed=7)
+    b = sample_comm_times(s, link, n_edges=2, seed=7)
+    assert (a == b).all()
+    assert not (a == sample_comm_times(s, link, n_edges=2, seed=8)).all()
+
+
+def test_straggler_curve_monotone_and_anchored_at_point_model():
+    """Satellite acceptance: the epoch-time-vs-straggler-tail curve — rows
+    monotone in sigma, and the sigma=0 row is exactly the deterministic
+    epoch_time of the median condition."""
+    from repro.netsim import straggler_curve
+
+    s = strategies(RESNET20_BYTES, 8)["decentralized_lp"]
+    rows = straggler_curve(s, WORST, PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH,
+                           n_edges=2)
+    assert [r["straggler"] for r in rows] == [0.0, 0.25, 0.5, 1.0]
+    means = [r["epoch_s_mean"] for r in rows]
+    p95s = [r["epoch_s_p95"] for r in rows]
+    assert means == sorted(means) and p95s == sorted(p95s)
+    assert rows[0]["epoch_s_mean"] == pytest.approx(
+        epoch_time(s, WORST, PAPER_COMPUTE_S, PAPER_ITERS_PER_EPOCH))
+    assert rows[0]["epoch_s_mean"] == pytest.approx(rows[0]["epoch_s_p95"])
