@@ -25,9 +25,17 @@ deterministic per-edge drop masks the sharded runtime consumes, at rates
 {0, R, min(2.5R, 0.75)}, and the table is the convergence-vs-drop-rate curve
 (plus the epoch-time-vs-straggler-tail curve when ``--straggler`` is set).
 
+``--error-feedback`` (or ``--algo``/``--wire``) runs the error-feedback sweep
+instead: {dcd, ecd, choco, deepsqueeze} at biased ~1-bit specs (``sign``,
+``sparse:0.05:topk``) against the D-PSGD fp32 plateau.  CHOCO and DeepSqueeze
+match fp32 to ~1% at 1.03 bits/element where DCD stalls orders of magnitude
+above the plateau and ECD finishes ABOVE the loss at init (marked DIVERGED).
+
     PYTHONPATH=src python examples/compare_compression.py [--quick]
     PYTHONPATH=src python examples/compare_compression.py --topology full_logn
     PYTHONPATH=src python examples/compare_compression.py --drop-rate 0.2 --quick
+    PYTHONPATH=src python examples/compare_compression.py --error-feedback
+    PYTHONPATH=src python examples/compare_compression.py --quick --algo choco --wire sign
 """
 import argparse
 
@@ -77,12 +85,30 @@ SPECS = [
 # is real), while D-PSGD carries no cross-node state — a dropped edge just
 # renormalizes that round's mixing row — so it tolerates rates that visibly
 # degrade DCD.  ECD sits in between: extrapolation amplifies staleness.
+# The error-feedback pair splits the same way: CHOCO's per-shift x-hat
+# estimates desync permanently on every dropped increment (stateful, like
+# DCD), while DeepSqueeze keeps all its state sender-side — it is the one
+# algorithm here that survives drops WITH compression on the wire.
 DROP_CONFIGS = [
     ("dcd 4b", "dcd", "quant:4:32"),
     ("ecd 4b", "ecd", "quant:4:32"),
     ("naive 4b", "naive", "quant:4:32"),
+    ("choco 1b", "choco", "sign"),
+    ("dsq 1b", "deepsqueeze", "sign"),
     ("dpsgd fp", "dpsgd", None),
 ]
+
+
+# the error-feedback headline: biased ~1-bit compression that plain
+# difference-compression cannot take.  At these specs DCD stalls orders of
+# magnitude above the fp32 plateau (top-5%) and ECD's extrapolated z-values
+# blow past the seed loss, while CHOCO and DeepSqueeze — whose compression
+# error is fed back instead of forgotten — match D-PSGD fp32 to ~1%.
+EF_SPECS = [
+    ("sign", "sign"),
+    ("top.05", "sparse:0.05:topk"),
+]
+EF_ALGOS = ("dcd", "ecd", "choco", "deepsqueeze")
 
 
 def drop_sweep(args, T: int) -> None:
@@ -103,7 +129,8 @@ def drop_sweep(args, T: int) -> None:
             row = []
             for rate in rates:
                 drop = f"{rate}:{args.drop_salt}" if rate else None
-                ref = GossipReference(name=name, plan=plan, wire=wire, drop=drop)
+                ref = GossipReference(name=name, plan=plan, wire=wire,
+                                      drop=drop, gamma=args.gamma)
                 h = run(problem, ref, T=T, lr=0.01, eval_every=T)
                 row.append(h["final_dist_opt"])
             print(f"{tag:>9} " + " ".join(f"{v:>12.3e}" for v in row))
@@ -124,6 +151,48 @@ def drop_sweep(args, T: int) -> None:
                   f"p95={row['epoch_s_p95']:.3f}s")
 
 
+def error_feedback_sweep(args, T: int) -> None:
+    """The error-feedback headline table: {dcd, ecd, choco, deepsqueeze} x
+    biased ~1-bit wire specs, against the D-PSGD fp32 plateau.  Rows marked
+    DIVERGED finished ABOVE the loss at the zero init — the biased-compression
+    failure the error-feedback algorithms exist to fix.  ``--algo``/``--wire``
+    restrict the grid to one row/column (the CI smoke runs one cell)."""
+    import jax.numpy as jnp
+
+    algos = [args.algo] if args.algo else list(EF_ALGOS)
+    specs = [(args.wire, args.wire)] if args.wire else list(EF_SPECS)
+    z = jax.random.normal(jax.random.key(0), (4096,))
+    for n in (8,) if args.quick else (8, 16):
+        plan = make_gossip_plan(args.topology, n)
+        W = np.asarray(plan.mixing_matrix())
+        problem = make_problem(jax.random.key(1), n=n, m=256, d=32,
+                               hetero=0.2, noise=0.1)
+        seed_loss = float(problem.global_loss(jnp.zeros((problem.dim,))))
+        base = run(problem, Algorithm(name="dpsgd", W=W, compressor=None),
+                   T=T, lr=0.01, eval_every=T)
+        sweep = [(tag, compressor_for(make_wire_format(spec)))
+                 for tag, spec in specs]
+        print(f"\n{args.topology} n={n}: error-feedback sweep, final global "
+              f"loss (T={T}, lr=0.01, choco gamma={args.gamma:g})")
+        print(f"  loss at init: {seed_loss:.3e}   "
+              f"D-PSGD fp32 plateau: {base['final_loss']:.3e}")
+        header = " ".join(
+            f"{f'{tag}({comp.wire_bits_per_element((z.size,)):.2f}b)':>16}"
+            for tag, comp in sweep)
+        print(f"{'algo':>12} " + header)
+        for name in algos:
+            row = []
+            for _, comp in sweep:
+                kw = {"gamma": args.gamma} if name == "choco" else {}
+                h = run(problem, Algorithm(name=name, W=W, compressor=comp, **kw),
+                        T=T, lr=0.01, eval_every=T)
+                loss = h["final_loss"]
+                mark = " DIVERGED" if not np.isfinite(loss) or loss > seed_loss \
+                    else ""
+                row.append(f"{loss:>7.3e}{mark:>9}")
+            print(f"{name:>12} " + " ".join(f"{c:>16}" for c in row))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -139,11 +208,29 @@ def main():
     ap.add_argument("--straggler", type=float, default=0.0,
                     help="also print the epoch-time-vs-straggler-tail curve "
                          "at this lognormal sigma (failure sweep only)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="run the error-feedback sweep: {dcd, ecd, choco, "
+                         "deepsqueeze} x biased ~1-bit wire specs vs the "
+                         "D-PSGD fp32 plateau")
+    ap.add_argument("--algo", default=None, choices=list(EF_ALGOS),
+                    help="restrict the error-feedback sweep to one algorithm "
+                         "(implies --error-feedback)")
+    ap.add_argument("--wire", default=None,
+                    help="restrict the error-feedback sweep to one wire spec, "
+                         "e.g. sign or sparse:0.05:topk (implies "
+                         "--error-feedback)")
+    ap.add_argument("--gamma", type=float, default=0.2,
+                    help="CHOCO consensus stepsize; must shrink with the "
+                         "compressor's delta (0.2 is stable for every spec "
+                         "here; 0.5 diverges at top-5%%)")
     args = ap.parse_args()
     T = 150 if args.quick else 600
 
     if args.drop_rate > 0.0:
         drop_sweep(args, T)
+        return
+    if args.error_feedback or args.algo or args.wire:
+        error_feedback_sweep(args, T)
         return
 
     z = jax.random.normal(jax.random.key(0), (4096,))

@@ -12,6 +12,12 @@ Implemented steps (all jittable, pure):
 * ``naive``  — D-PSGD with naively compressed exchanged models (Supp. D; must fail).
 * ``dcd``    — Algorithm 1, difference compression.
 * ``ecd``    — Algorithm 2, extrapolation compression.
+* ``choco``  — CHOCO-SGD [Koloskova et al. 2019]: gossip compressed differences
+  to replica estimates with a consensus stepsize gamma; converges under
+  *arbitrary* (even biased) delta-contraction compression.
+* ``deepsqueeze`` — DeepSqueeze [Tang et al. 2019]: error-compensated
+  compression — carry the residual of the *measured* decode into the next
+  round's message.
 
 Gradients are supplied by the caller (stacked, one per node) so the same steps serve
 the quadratic testbeds, the LM trainer, and the property tests.
@@ -19,6 +25,7 @@ the quadratic testbeds, the LM trainer, and the property tests.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -52,6 +59,11 @@ class Algorithm:
     name: str
     W: np.ndarray
     compressor: Compressor = IdentityCompressor()
+    gamma: float = 0.5          # CHOCO consensus stepsize, valid on (0, 1]
+
+    def __post_init__(self):
+        assert 0.0 < self.gamma <= 1.0, \
+            f"CHOCO consensus stepsize gamma must be in (0, 1], got {self.gamma}"
 
     @property
     def n_nodes(self) -> int:
@@ -61,11 +73,19 @@ class Algorithm:
         """Broadcast a single model to all ``n`` nodes (paper: x_1^{(i)} = x_1)."""
         n = self.n_nodes
         X = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), params_single)
-        aux = X if self.name == "ecd" else None
+        # ecd: shared estimates X_tilde; choco: replica estimates X_hat
+        # (x_hat_0 = X is consistent because all nodes start from one x_0, and
+        # keeps the first compressed difference gradient-sized); deepsqueeze:
+        # the error-feedback residual, zero at t=0
+        aux = X if self.name in ("ecd", "choco") else None
+        if self.name == "deepsqueeze":
+            aux = jax.tree.map(jnp.zeros_like, X)
         return AlgoState(params=X, step=jnp.asarray(1, jnp.int32), aux=aux)
 
     def step_fn(self) -> Callable[[AlgoState, Any, jax.Array, jax.Array], AlgoState]:
         fn = _STEPS[self.name]
+        if self.name == "choco":
+            fn = functools.partial(fn, gamma=self.gamma)
         W = self.W
         comp = self.compressor
 
@@ -143,12 +163,69 @@ def ecd_step(state, grads, key, lr, W, comp) -> AlgoState:
     return AlgoState(X_new, state.step + 1, Xt_new)
 
 
+def choco_step(state, grads, key, lr, W, comp, *, gamma=0.5) -> AlgoState:
+    """CHOCO-SGD (Koloskova et al. 2019), adapt-then-combine form.
+
+    ``aux`` holds the shared replica estimates ``X_hat`` (one stacked tree:
+    every node reconstructs estimate j from the same compressed message, so
+    the estimates coincide — exactly like ECD's shared X_tilde).  Each step:
+
+        X_half = X - lr G                       (gradient first)
+        Q      = C(X_half - X_hat)              (difference to own estimate)
+        X_hat' = X_hat + Q                      (all estimates advance)
+        X_new  = X_half + gamma (X_hat' W - X_hat')
+
+    The consensus term mixes the *estimates* — every quantity that crosses
+    the wire is a compressed difference, and the consensus stepsize gamma
+    damps the compression noise, so convergence holds for arbitrary (biased)
+    delta-contractions where DCD/ECD need unbiasedness.  With gamma = 1 and
+    an exact compressor the step is X_half W — plain D-PSGD mixing.
+    """
+    X, Xh = state.params, state.aux
+    X_half = _sgd(X, grads, lr)
+    Z = jax.tree.map(lambda a, b: a - b, X_half, Xh)
+    Q = comp.tree_apply(key, Z)
+    Xh_new = jax.tree.map(lambda h, q: h + q, Xh, Q)
+    mixed = mix(W, Xh_new)
+    X_new = jax.tree.map(lambda x, m, h: (x + gamma * (m - h)).astype(x.dtype),
+                         X_half, mixed, Xh_new)
+    return AlgoState(X_new, state.step + 1, Xh_new)
+
+
+def deepsqueeze_step(state, grads, key, lr, W, comp) -> AlgoState:
+    """DeepSqueeze (Tang et al. 2019): error-compensated compression.
+
+    ``aux`` holds the per-node residual ``E`` (zero at t=0).  Each step the
+    error-compensated update ``V = lr G + E`` is compressed, the residual is
+    rebuilt from the *measured* decode, and the compressed message is what
+    gets gossiped (neighbors mix ``x_j - d_j``):
+
+        V     = lr G + E
+        D     = C(V)
+        E'    = V - D
+        X_new = (X - D) W
+
+    Stateless across neighbors (no replica trees): every node only carries
+    its own residual, and the compression error never accumulates because
+    whatever the codec dropped this round rides into the next message.
+    """
+    X, E = state.params, state.aux
+    V = jax.tree.map(lambda e, g: e + lr * g.astype(e.dtype), E, grads)
+    D = comp.tree_apply(key, V)
+    E_new = jax.tree.map(lambda v, d: v - d, V, D)
+    X_eff = jax.tree.map(lambda x, d: (x - d).astype(x.dtype), X, D)
+    X_new = mix(W, X_eff)
+    return AlgoState(X_new, state.step + 1, E_new)
+
+
 _STEPS = {
     "cpsgd": cpsgd_step,
     "dpsgd": dpsgd_step,
     "naive": naive_step,
     "dcd": dcd_step,
     "ecd": ecd_step,
+    "choco": choco_step,
+    "deepsqueeze": deepsqueeze_step,
 }
 
 ALGORITHMS = tuple(_STEPS)
@@ -160,7 +237,7 @@ ALGORITHMS = tuple(_STEPS)
 
 # Wire-format encode salts, shared with the sharded runtime so both encode
 # bit-identical payloads for the same (step, leaf) counter.
-_WIRE_SALTS = {"naive": 1, "dcd": 2, "ecd": 3}
+_WIRE_SALTS = {"naive": 1, "dcd": 2, "ecd": 3, "choco": 4, "deepsqueeze": 5}
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -192,17 +269,21 @@ class GossipReference:
     key: compression and failure randomness are pure functions of the step.
     """
 
-    name: str                    # dpsgd | naive | dcd | ecd
+    name: str                    # dpsgd | naive | dcd | ecd | choco | deepsqueeze
     plan: Any                    # GossipPlan | GossipSchedule
     wire: Optional[Any] = None   # WireFormat | spec str | None (dpsgd)
     drop: Optional[Any] = None   # DropSpec | rate float | "rate[:salt[:decay]]"
+    gamma: float = 0.5           # CHOCO consensus stepsize, valid on (0, 1]
 
     def __post_init__(self):
         from repro.distributed.failures import make_drop_spec
         from repro.distributed.gossip import as_schedule
         from repro.distributed.wire import make_wire_format
 
-        assert self.name in ("dpsgd", "naive", "dcd", "ecd"), self.name
+        assert self.name in ("dpsgd", "naive", "dcd", "ecd", "choco",
+                             "deepsqueeze"), self.name
+        assert 0.0 < self.gamma <= 1.0, \
+            f"CHOCO consensus stepsize gamma must be in (0, 1], got {self.gamma}"
         object.__setattr__(self, "plan", as_schedule(self.plan))
         if self.wire is not None:
             object.__setattr__(self, "wire", make_wire_format(self.wire))
@@ -226,7 +307,12 @@ class GossipReference:
         elif self.name == "ecd":
             aux = {"tilde_self": X}
             aux.update({f"tilde{s:+d}": X for s in sched.shift_union})
-        if self.drop is not None and self.name in ("dcd", "ecd"):
+        elif self.name == "choco":
+            aux = {"hat_self": X}
+            aux.update({f"hat{s:+d}": X for s in sched.shift_union})
+        elif self.name == "deepsqueeze":
+            aux = {"err_self": jax.tree.map(jnp.zeros_like, X)}
+        if self.drop is not None and self.name in ("dcd", "ecd", "choco"):
             aux.update({fresh_key(s, self.drop.salt): jnp.ones((n,), jnp.float32)
                         for s in sched.shift_union})
         return AlgoState(params=X, step=jnp.asarray(0, jnp.int32), aux=aux)
@@ -237,6 +323,7 @@ class GossipReference:
         from repro.distributed.gossip import plan_mix_gated, roll_tree
 
         sched, wire, drop, name = self.plan, self.wire, self.drop, self.name
+        gamma = self.gamma
         rounds, period, union = sched.rounds, sched.period, sched.shift_union
         time_varying = sched.time_varying and period > 1
         n = self.n_nodes
@@ -259,7 +346,7 @@ class GossipReference:
         def one_round(rnd, enc_step, X, aux, grads, lr):
             aux = dict(aux)
             masks = masks_for(enc_step)
-            if drop is not None and name in ("dcd", "ecd"):
+            if drop is not None and name in ("dcd", "ecd", "choco"):
                 for s in union:
                     fk = fresh_key(s, drop.salt)
                     aux[fk] = update_freshness(aux[fk], masks[s], drop.decay)
@@ -302,6 +389,49 @@ class GossipReference:
                     aux[f"rep{s:+d}"] = rep_new
                 return X, aux
 
+            if name == "choco":
+                # gradient first (adapt-then-combine), then the compressed
+                # difference to the node's own estimate advances ALL estimate
+                # trees (self unconditionally — the node always hears its own
+                # message; per-shift trees freeze on dropped edges), and the
+                # gamma-consensus mixes the UPDATED estimates: gated mixing
+                # folds dropped-edge mass into the self weight, so the
+                # (mixed - hat_self) term zeroes exactly the dropped edges.
+                X_half = _sgd(X, grads, lr) if grads is not None else X
+                Z = jax.tree.map(lambda a, b: a - b, X_half, aux["hat_self"])
+                tdef, payload = wire.encode_tree(Z, enc_step, salt)
+                dec = decode_f32(tdef, payload, Z)
+                aux["hat_self"] = axpy(aux["hat_self"], dec)
+                for s in union:
+                    hat_new = axpy(aux[f"hat{s:+d}"], roll_tree(dec, s))
+                    if drop is not None:
+                        hat_new = select_delivered(masks[s], hat_new,
+                                                   aux[f"hat{s:+d}"])
+                    aux[f"hat{s:+d}"] = hat_new
+                hats = {s: aux[f"hat{s:+d}"] for s in rnd.shift_list}
+                mixed = plan_mix_gated(rnd, aux["hat_self"], hats, gates)
+                X = jax.tree.map(
+                    lambda x, m, h: (x + gamma * (m - h)).astype(x.dtype),
+                    X_half, mixed, aux["hat_self"])
+                return X, aux
+
+            if name == "deepsqueeze":
+                # error-compensated update: compress V = lr G + E, rebuild the
+                # residual from the measured decode, gossip the compressed
+                # message (neighbors mix x_j - d_j); stateless across
+                # neighbors, so drops are handled purely by the gated mixing
+                E = aux["err_self"]
+                V = jax.tree.map(lambda e, g: e + lr * g.astype(e.dtype),
+                                 E, grads) if grads is not None else E
+                tdef, payload = wire.encode_tree(V, enc_step, salt)
+                dec = decode_f32(tdef, payload, V)
+                aux["err_self"] = axpy(V, dec, -1.0)
+                X_eff = axpy(X, dec, -1.0)
+                nbrs = {s: axpy(roll_tree(X, s), roll_tree(dec, s), -1.0)
+                        for s in rnd.shift_list}
+                X = plan_mix_gated(rnd, X_eff, nbrs, gates)
+                return X, aux
+
             # ecd
             s_t = (enc_step + 1).astype(jnp.float32)
             tildes = {s: aux[f"tilde{s:+d}"] for s in rnd.shift_list}
@@ -333,7 +463,8 @@ class GossipReference:
                      for rnd in rounds],
                     (X, aux))
             else:
-                grad_round = 0 if name in ("dcd", "ecd") else None
+                grad_round = 0 if name in ("dcd", "ecd", "choco",
+                                           "deepsqueeze") else None
                 for r_idx, rnd in enumerate(rounds):
                     X, aux = one_round(
                         rnd, t * period + r_idx, X, aux,
@@ -350,10 +481,12 @@ def make_algorithm(
     n_nodes: int,
     topology: str = "ring",
     compressor: Optional[Compressor] = None,
+    gamma: float = 0.5,
 ) -> Algorithm:
     W = topo.make_topology(topology, n_nodes)
     topo.check_mixing_matrix(W)
-    return Algorithm(name=name, W=W, compressor=compressor or IdentityCompressor())
+    return Algorithm(name=name, W=W, compressor=compressor or IdentityCompressor(),
+                     gamma=gamma)
 
 
 # --------------------------------------------------------------------------

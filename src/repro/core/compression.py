@@ -53,6 +53,7 @@ from repro.distributed.wire import (
     Fp16Wire,
     IdentityWire,
     QuantWire,
+    SignWire,
     SparseWire,
     WireFormat,
     leaf_seed,
@@ -335,6 +336,56 @@ class TopKSparsifier(_SparseCodecCompressor):
         return float(np.sqrt(1.0 - self._keep_fraction(self.block_size)))
 
 
+@dataclasses.dataclass(frozen=True)
+class SignCompressor(Compressor):
+    """1-bit scaled-sign compression: a view over
+    :class:`~repro.distributed.wire.SignWire`.
+
+    Deterministic and *biased* — outside the paper's Assumption 1.5 / 2
+    entirely, which is the point: DCD/ECD have no guarantee here, while the
+    error-feedback family (CHOCO-SGD, DeepSqueeze) converges under any
+    delta-contraction.  ``scale="mean"`` decodes ``mean|z| * sign(z)`` — the
+    ℓ₂ projection of ``z`` onto ``span(sign(z))`` — so per block
+    ``||z - C(z)||² = ||z||² - ||z||₁²/d``, and ``||z||₁ >= ||z||₂`` gives
+    the delta-contraction ``||z - C(z)||² <= (1 - 1/d) ||z||²`` (tight at a
+    1-sparse block).  ``scale="l2"`` is signSGD's ``||z||₂/sqrt(d)``
+    normalization — not a contraction in general (the property tests
+    demonstrate it on adversarial inputs), so only the error-feedback
+    algorithms should run it.
+    """
+
+    block_size: int = 1024
+    scale: str = "mean"
+    name: str = "sign"
+    salt: int = 0
+
+    def __post_init__(self):
+        self.wire  # noqa: B018  (validates scale mode + block alignment)
+
+    @property
+    def wire(self) -> SignWire:
+        return SignWire(block=self.block_size, scale=self.scale)
+
+    def alpha_bound(self) -> float:
+        """Worst-case contraction factor ``||z - C(z)|| / ||z||``.
+
+        For ``mean`` scale: ``||z - C(z)||² = ||z||² - ||z||₁²/d`` per block
+        (C(z) = (||z||₁/d)·sign(z) is the ℓ₂ projection of z onto
+        span(sign(z))), and ``||z||₁ >= ||z||₂`` always, so the factor is at
+        most ``sqrt(1 - 1/d)`` — attained by a 1-sparse block.  For ``l2``
+        scale the error can exceed ``||z||`` (no contraction): return the
+        worst case over the sign-flip, ``sqrt(2)``."""
+        if self.scale == "mean":
+            return float(np.sqrt(1.0 - 1.0 / self.block_size))
+        return float(np.sqrt(2.0))
+
+    def delta_bound(self) -> float:
+        """The delta of the CHOCO-style contraction assumption
+        ``E||z - C(z)||² <= (1 - delta)||z||²`` (mean scale only)."""
+        assert self.scale == "mean", "l2 sign scale is not a contraction"
+        return 1.0 / self.block_size
+
+
 def measured_alpha(comp: Compressor, key: jax.Array, z: jax.Array, n_samples: int = 16) -> float:
     """Monte-Carlo estimate of ``||C(z)-z|| / ||z||`` for a given input."""
     keys = jax.random.split(key, n_samples)
@@ -356,6 +407,8 @@ def compressor_for(wire, salt: int = 0) -> Compressor:
         cls = TopKSparsifier if w.mode == "topk" else RandomSparsifier
         return cls(p=w.p, block_size=w.block, value_dtype=w.value_dtype,
                    mode=w.mode, salt=salt)
+    if isinstance(w, SignWire):
+        return SignCompressor(block_size=w.block, scale=w.scale, salt=salt)
     if isinstance(w, Fp16Wire):
         return HalfPrecisionCompressor(salt=salt)
     if isinstance(w, IdentityWire):

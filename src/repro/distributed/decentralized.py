@@ -26,6 +26,13 @@ Algorithm state (beyond params X and optimizer moments):
   ``rep{s} == roll(X, s)`` is tested.
 * ECD: ``tilde_self`` plus one estimate tree per shift (``tilde{s:+d}``) with
   the (1-2/s, 2/s) update of Algorithm 2.
+* CHOCO: ``hat_self`` plus one estimate tree per shift (``hat{s:+d}``) — the
+  Koloskova et al. compressed-consensus estimates x-hat, advanced by the
+  received compressed differences; mixing happens on the estimates with
+  consensus stepsize ``gamma``.
+* DeepSqueeze: ``err_self`` — the local error-feedback residual; the update
+  plus residual is compressed, the leftover becomes the next residual, and the
+  plain (uncompensated-state) gossip mixes ``X - decode``.
 
 Stochastic rounding uses the same counter-based PCG hash as the Pallas kernel
 (kernels/ref.py), seeded by (step, salt, leaf) — deterministic, key-free inside
@@ -124,7 +131,12 @@ def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
     elif algo == "ecd":
         aux = {"tilde_self": aux_copy()}
         aux.update({f"tilde{s:+d}": aux_copy() for s in sched.shift_union})
-    if drop is not None and algo in ("dcd", "ecd"):
+    elif algo == "choco":
+        aux = {"hat_self": aux_copy()}
+        aux.update({f"hat{s:+d}": aux_copy() for s in sched.shift_union})
+    elif algo == "deepsqueeze":
+        aux = {"err_self": jax.tree.map(jnp.zeros_like, aux_copy())}
+    if drop is not None and algo in ("dcd", "ecd", "choco"):
         aux.update({fresh_key(s, drop.salt): jnp.ones((n_nodes,), jnp.float32)
                     for s in sched.shift_union})
     return DistState(params=X, opt=opt.init(X), aux=aux,
@@ -188,6 +200,7 @@ def make_dist_train_step(
     mesh: Optional[Any] = None,
     fused: Optional[bool] = None,
     drop: Optional[Any] = None,       # DropSpec | rate | "rate[:salt[:decay]]"
+    gamma: float = 0.5,               # CHOCO consensus stepsize, in (0, 1]
     topology: Optional[str] = None,   # deprecated: use plan=make_gossip_plan(...)
 ):
     """Build ``step(state, batch) -> (state, metrics)``.
@@ -202,8 +215,10 @@ def make_dist_train_step(
     :class:`GossipPlan` or :class:`GossipSchedule`
     (``make_gossip_plan("chain", n)``, ``make_gossip_plan("full_logn", n)``, a
     compiled mixing matrix, ...) or an int node count for the default ring.
-    DCD/ECD aux trees key off the schedule's shift union (== the plan's shifts
-    for a flat plan); one collective-permute per shift per round.
+    DCD/ECD/CHOCO aux trees key off the schedule's shift union (== the plan's
+    shifts for a flat plan); one collective-permute per shift per round.
+    ``gamma`` is CHOCO's consensus stepsize (ignored by the other algorithms):
+    ``X <- X_half + gamma * (mix(hat) - hat_self)``, valid on (0, 1].
 
     ``fused`` (default: auto — on iff the wire format packs) routes every
     DCD/ECD receive-side decode through the format's fused axpy Pallas kernel
@@ -242,7 +257,10 @@ def make_dist_train_step(
     ``cpsgd`` AllReduce baseline models the reliable datacenter fabric and
     refuses drop injection.
     """
-    assert algo in ("cpsgd", "dpsgd", "naive", "dcd", "ecd")
+    assert algo in ("cpsgd", "dpsgd", "naive", "dcd", "ecd",
+                    "choco", "deepsqueeze")
+    assert 0.0 < gamma <= 1.0, f"CHOCO consensus stepsize gamma={gamma} " \
+        "must lie in (0, 1]"
     sched = as_schedule(_resolve_plan(plan, topology))
     rounds, n_rounds, union = sched.rounds, sched.period, sched.shift_union
     n_nodes = sched.n
@@ -385,8 +403,69 @@ def make_dist_train_step(
             aux_d[f"tilde{s:+d}"] = est
         return X_next, aux_d
 
+    def _choco_round(rnd, enc_step, carry, upd):
+        # CHOCO-SGD (Koloskova et al.): gossip happens on the compressed
+        # consensus estimates x-hat, never on X itself, so ANY contractive
+        # compressor (biased sign/top-k included) keeps the fixed point.
+        X_cur, aux_d = carry
+        aux_d = dict(aux_d)
+        if drop is None:
+            masks = None
+        else:
+            masks = _round_masks(enc_step, union)
+            aux_d = _advance_freshness(aux_d, masks)
+        X_half = apply_updates(X_cur, upd) if upd is not None else X_cur
+        Z = jax.tree.map(lambda a, b: a - b, X_half, aux_d["hat_self"])
+        tdef, payload = wire.encode_tree(Z, enc_step, salt=4)
+        # every node decodes the SAME words it sent, so hat_self stays equal
+        # to every neighbor's hat{s} of this node — the shared-estimate
+        # invariant ``hat{s} == roll(hat_self, s)`` is tested (drop-free)
+        hat_self = dec_axpy(tdef, payload, aux_d["hat_self"], 1.0)
+        aux_d["hat_self"] = hat_self
+        for s in union:
+            hat = dec_axpy(tdef, _roll(payload, s), aux_d[f"hat{s:+d}"], 1.0)
+            if masks is not None:
+                hat = select_delivered(masks[s], hat, aux_d[f"hat{s:+d}"])
+            aux_d[f"hat{s:+d}"] = hat
+        hats = {s: aux_d[f"hat{s:+d}"] for s in rnd.shift_list}
+        if masks is None:
+            mixed = plan_mix(rnd, hat_self, hats)
+        else:
+            gates = {s: masks[s] * aux_d[fresh_key(s, drop.salt)]
+                     for s in rnd.shift_list}
+            mixed = plan_mix_gated(rnd, hat_self, hats, gates)
+        X_new = jax.tree.map(
+            lambda x, m, h: (x + gamma * (m - h)).astype(x.dtype),
+            X_half, mixed, hat_self)
+        return X_new, aux_d
+
+    def _deepsqueeze_round(rnd, enc_step, carry, upd):
+        # DeepSqueeze: compress update + residual, keep the leftover as the
+        # next residual, gossip X - decode.  No estimate trees — the round is
+        # stateless on the receive side, so dropped edges just lose one
+        # (error-compensated) update instead of desyncing a replica.
+        X_cur, aux_d = carry
+        aux_d = dict(aux_d)
+        E = aux_d["err_self"]
+        # upd is the optimizer delta (-lr g), and DeepSqueeze compresses
+        # lr g + e, so V = e - upd; gradient-free rounds flush the residual
+        V = jax.tree.map(lambda e, u: e - u, E, upd) if upd is not None else E
+        tdef, payload = wire.encode_tree(V, enc_step, salt=5)
+        aux_d["err_self"] = dec_axpy(tdef, payload, V, -1.0)
+        X_eff = dec_axpy(tdef, payload, X_cur, -1.0)
+        nbrs = {s: dec_axpy(tdef, _roll(payload, s), _roll(X_cur, s), -1.0)
+                for s in rnd.shift_list}
+        if drop is None:
+            X_new = plan_mix(rnd, X_eff, nbrs)
+        else:
+            X_new = plan_mix_gated(rnd, X_eff, nbrs,
+                                   _round_masks(enc_step, rnd.shift_list))
+        return X_new, aux_d
+
     round_fn = {"dpsgd": _dpsgd_round, "naive": _naive_round,
-                "dcd": _dcd_round, "ecd": _ecd_round}.get(algo)
+                "dcd": _dcd_round, "ecd": _ecd_round,
+                "choco": _choco_round,
+                "deepsqueeze": _deepsqueeze_round}.get(algo)
 
     def step(state: DistState, batch: Any) -> Tuple[DistState, Dict[str, jax.Array]]:
         (losses, metrics), grads = grad_fn(state.params, batch)
@@ -418,7 +497,8 @@ def make_dist_train_step(
             # the rounds (X W_eff - lr G — one stacked step with the effective
             # W); dcd/ecd thread it into round 0 (the stacked equivalent is
             # their reference step chained with zero gradients after round 0)
-            grad_round = 0 if algo in ("dcd", "ecd") else None
+            grad_round = 0 if algo in ("dcd", "ecd", "choco",
+                                       "deepsqueeze") else None
             carry = (X, aux)
             for r_idx, rnd in enumerate(rounds):
                 carry = round_fn(rnd, state.step * n_rounds + r_idx, carry,

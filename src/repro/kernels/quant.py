@@ -95,6 +95,8 @@ PACKABLE_BITS = (2, 3, 4, 5, 6, 7)
 
 SPARSE_MODES = ("randk", "topk")
 
+SIGN_SCALE_MODES = ("mean", "l2")
+
 
 def stream_geometry(bits: int) -> tuple:
     """(codes per group, words per group) of the v2 stream layout — the single
@@ -558,6 +560,124 @@ def sparse_unpack_scatter_2d(values: jax.Array, packed: jax.Array, *, cols: int,
         out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
         interpret=interpret,
     )(values, packed)
+    return out[:rows] if pad else out
+
+
+# ----------------------------------------------------------------- sign codec
+
+def _sign_scale(x, *, scale_mode: str):
+    """Per-row scale of the 1-bit codec: ``mean`` = mean|x| (scaled-sign,
+    a delta-contraction), ``l2`` = ||x||_2/sqrt(cols) (signSGD-style, not
+    contractive in general).  Identical expressions to the oracle's
+    ``sign_scale_2d`` so kernel and reference scales are bit-equal."""
+    if scale_mode == "mean":
+        return jnp.mean(jnp.abs(x), axis=1, keepdims=True)
+    return jnp.sqrt(jnp.mean(x * x, axis=1, keepdims=True))
+
+
+def _sign_pack_kernel(x_ref, packed_ref, scale_ref, *, scale_mode: str, cols: int):
+    """Fused sign + width-1 bit-pack of one (block_rows, cols) tile.
+
+    No seed operand: the sign codec is deterministic (bit = x >= 0, so -0.0
+    codes as +1 like +0.0).  Width-1 stream geometry collapses to cpg=32,
+    wpg=1: group ``g`` packs the 32 bits ``{u[j*G + g] : j}`` into one word,
+    bit ``j`` at position ``j`` — the plane-major shift-and-OR loop below is
+    exactly :func:`repro.kernels.ref.pack_uint` at ``bits=1``.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    u = (x >= 0.0).astype(jnp.uint32)
+    g = cols // 32
+    word = jnp.zeros(u.shape[:-1] + (g,), jnp.uint32)
+    for j in range(32):
+        word = word | (u[:, j * g:(j + 1) * g] << jnp.uint32(j))
+    packed_ref[...] = word
+    scale_ref[...] = _sign_scale(x, scale_mode=scale_mode)
+
+
+def _unpack_sign_axpy_kernel(weights_ref, packed_ref, scale_ref, acc_ref,
+                             out_ref):
+    # weights_ref = [acc_weight, weight], exactly like _unpack_dequant_axpy_kernel;
+    # the unpacked factor is exactly +-1, so folding weight into the scale
+    # cannot change the rounding vs the oracle's weight * ((2u-1) * scale)
+    word = packed_ref[...]
+    aw = weights_ref[0]
+    ws = scale_ref[...] * weights_ref[1]
+    g = word.shape[-1]
+    for j in range(32):
+        u = ((word >> jnp.uint32(j)) & jnp.uint32(1)).astype(jnp.float32)
+        out_ref[:, j * g:(j + 1) * g] = (
+            aw * acc_ref[:, j * g:(j + 1) * g] + (u * 2.0 - 1.0) * ws)
+
+
+def sign_pack_2d(x: jax.Array, *, scale_mode: str = "mean",
+                 interpret: bool = False):
+    """Fused 1-bit sign + pack of a (rows, cols) f32 array.
+
+    Returns (packed uint32 (rows, cols/32), scale f32 (rows, 1)) — identical
+    word-for-word to the kernels/ref.py oracle (the codec is deterministic,
+    so no seed rides the call).  ``cols % 128 == 0`` (lane contract), which
+    also guarantees the width-1 stream's cols % 32 == 0.
+    """
+    rows, cols = x.shape
+    assert cols % 128 == 0, f"block_size must be a multiple of 128, got {cols}"
+    assert scale_mode in SIGN_SCALE_MODES, \
+        f"sign scale modes are {SIGN_SCALE_MODES}, got {scale_mode}"
+    w = cols // 32
+    bm = _pick_block_rows(rows, cols)
+    (x,), pad = _pad_rows([x], bm, rows)
+    grid = ((rows + pad) // bm,)
+    packed, scale = pl.pallas_call(
+        functools.partial(_sign_pack_kernel, scale_mode=scale_mode, cols=cols),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, cols), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows + pad, w), jnp.uint32),
+            jax.ShapeDtypeStruct((rows + pad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    if pad:
+        packed, scale = packed[:rows], scale[:rows]
+    return packed, scale
+
+
+def unpack_sign_axpy_2d(packed: jax.Array, scale: jax.Array, acc: jax.Array, *,
+                        weight, acc_weight=1.0,
+                        interpret: bool = False) -> jax.Array:
+    """Fused unpack + sign-decode + accumulate:
+    ``acc_weight * acc + weight * (scale * sign)``.
+
+    The 1-bit receive side of a gossip round: the reconstructed fp32 neighbor
+    never exists in HBM — each of the 32 bit planes is scaled and added into
+    the mix accumulator while still in VMEM.  Both weights ride the same (2,)
+    operand as the quantized/sparse axpy kernels, so traced mixing weights
+    drive this kernel too.
+    """
+    rows, w = packed.shape
+    cols = w * 32
+    assert acc.shape == (rows, cols), (acc.shape, (rows, cols))
+    bm = _pick_block_rows(rows, cols)
+    (packed, scale, acc), pad = _pad_rows([packed, scale, acc], bm, rows)
+    grid = ((rows + pad) // bm,)
+    weights = jnp.stack([jnp.asarray(acc_weight, jnp.float32).reshape(()),
+                         jnp.asarray(weight, jnp.float32).reshape(())])
+    out = pl.pallas_call(
+        _unpack_sign_axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), jnp.float32),
+        interpret=interpret,
+    )(weights, packed, scale.astype(jnp.float32), acc.astype(jnp.float32))
     return out[:rows] if pad else out
 
 

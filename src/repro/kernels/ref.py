@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.kernels.quant import (  # noqa: F401  (shared single source of truth)
     PACKABLE_BITS,
+    SIGN_SCALE_MODES,
     SPARSE_MODES,
     idx_bits_for,
     pcg_hash,
@@ -266,3 +267,49 @@ def sparse_scatter_axpy_2d_ref(values: jax.Array, packed: jax.Array,
     cols = acc.shape[-1]
     return acc_weight * acc.astype(jnp.float32) \
         + weight * sparse_unpack_scatter_2d_ref(values, packed, k=k, cols=cols)
+
+
+# -------------------------------------------------------------- sign codec
+
+
+def sign_scale_2d(x: jax.Array, *, scale_mode: str) -> jax.Array:
+    """Per-row magnitude of the 1-bit codec, shared by oracle, kernel, and
+    codec so all three compute the identical (rows, 1) f32 scale.  ``mean`` is
+    the scaled-sign compressor ``mean|x| * sign(x)`` (a delta-contraction:
+    ``||x - C(x)||^2 = ||x||^2 - ||x||_1^2/d <= (1 - 1/d) ||x||^2``); ``l2``
+    is the signSGD-style ``||x||_2/sqrt(d)`` normalization, NOT contractive in
+    general — exactly the biased regime error feedback exists for."""
+    assert scale_mode in SIGN_SCALE_MODES, \
+        f"sign scale modes are {SIGN_SCALE_MODES}, got {scale_mode}"
+    x = x.astype(jnp.float32)
+    if scale_mode == "mean":
+        return jnp.mean(jnp.abs(x), axis=1, keepdims=True)
+    return jnp.sqrt(jnp.mean(x * x, axis=1, keepdims=True))
+
+
+def sign_pack_2d_ref(x: jax.Array, *, scale_mode: str = "mean"):
+    """Oracle for the fused sign+pack kernel: one sign bit per element
+    (``x >= 0``, so -0.0 and +0.0 both code as +1) plus a per-row scale,
+    bits packed 32-per-word through the width-1 :func:`pack_uint` stream.
+    Deterministic — the sign codec takes no seed.  ``cols % 32 == 0``.
+
+    Returns (packed uint32 (rows, cols/32), scale f32 (rows, 1))."""
+    x = x.astype(jnp.float32)
+    bits = (x >= 0.0).astype(jnp.uint32)
+    return pack_uint(bits, bits=1), sign_scale_2d(x, scale_mode=scale_mode)
+
+
+def unpack_sign_2d_ref(packed: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`sign_pack_2d_ref`: ``scale * (2u - 1)``."""
+    u = unpack_uint(packed, bits=1).astype(jnp.float32)
+    return (u * 2.0 - 1.0) * scale.astype(jnp.float32)
+
+
+def unpack_sign_axpy_2d_ref(packed: jax.Array, scale: jax.Array,
+                            acc: jax.Array, *, weight: float,
+                            acc_weight: float = 1.0) -> jax.Array:
+    # the sign factor is exactly +-1, so weight association cannot change the
+    # rounding — this matches the fused kernel's (scale * weight) grouping
+    # bit-for-bit
+    return acc_weight * acc.astype(jnp.float32) \
+        + weight * unpack_sign_2d_ref(packed, scale)

@@ -66,10 +66,11 @@ def _nonembed_params(cfg, p_sds) -> int:
 def _gossip_record(gossip, algo: str) -> Dict[str, Any]:
     """Shared gossip accounting fields for the dryrun JSONL records.
     ``gossip_payloads`` is the payload permutes this algo actually issues per
-    step: DCD/ECD roll every delta once per union-shift aux tree
-    (``replica_payloads``, == degree on flat plans); everything else rolls
-    per round shift (``degree``)."""
-    payloads = gossip.replica_payloads if algo in ("dcd", "ecd") else gossip.degree
+    step: DCD/ECD/CHOCO roll every delta once per union-shift aux tree
+    (``replica_payloads``, == degree on flat plans); everything else —
+    including the stateless DeepSqueeze — rolls per round shift (``degree``)."""
+    payloads = gossip.replica_payloads if algo in ("dcd", "ecd", "choco") \
+        else gossip.degree
     return {
         "topology": gossip.name, "gossip_degree": gossip.degree,
         "gossip_rounds": getattr(gossip, "period", 1),
@@ -90,7 +91,8 @@ def _failure_record(codec, gossip, algo: str, p_sds, drop,
         straggler_curve, strategies_for,
     )
     rate = drop.rate if drop is not None else 0.0
-    payloads = gossip.replica_payloads if algo in ("dcd", "ecd") else gossip.degree
+    payloads = gossip.replica_payloads if algo in ("dcd", "ecd", "choco") \
+        else gossip.degree
     rec: Dict[str, Any] = {
         "drop_rate": rate,
         "drop_salt": drop.salt if drop is not None else 0,
@@ -132,7 +134,8 @@ def _state_shardings(state_sds, mesh, n_routed):
 def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dcd",
                  wire: str = "quant:8", topology: str = "ring",
                  momentum: float = 0.0, drop_rate: float = 0.0,
-                 drop_salt: int = 0, straggler: float = 0.0) -> Dict[str, Any]:
+                 drop_salt: int = 0, straggler: float = 0.0,
+                 gamma: float = 0.5) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     plan = TRAIN_PLANS[arch]
@@ -144,14 +147,15 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
     model = build_model(cfg)
     opt = sgd(momentum=momentum)
     gossip = make_gossip_plan(topology, n)
-    codec = make_wire_format(wire) if algo in ("naive", "dcd", "ecd") else None
+    codec = make_wire_format(wire) \
+        if algo in ("naive", "dcd", "ecd", "choco", "deepsqueeze") else None
     loss_fn = lambda p, b: model.loss(p, b, remat=plan.remat)
     # mesh is multi-axis (node, fsdp, model): the step falls back from the
     # shard_map-fused decode to the sharding-preserving reference path (see
     # _make_decode_axpy) — the wire payload is identical either way
     drop = make_drop_spec(drop_rate, salt=drop_salt)
     step = make_dist_train_step(loss_fn, algo, opt, codec, gossip, constant(1e-2),
-                                mesh=mesh, drop=drop)
+                                mesh=mesh, drop=drop, gamma=gamma)
 
     import jax.numpy as _jnp
     aux_dtype = _jnp.bfloat16 if plan.aux_dtype == "bfloat16" else None
@@ -294,19 +298,20 @@ def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool) -> Dict[str, An
 def dryrun(arch: str, shape_name: str, *, multi_pod: bool = False, algo: str = "dcd",
            wire: str = "quant:8", topology: str = "ring",
            drop_rate: float = 0.0, drop_salt: int = 0,
-           straggler: float = 0.0) -> Dict[str, Any]:
+           straggler: float = 0.0, gamma: float = 0.5) -> Dict[str, Any]:
     shape = SHAPES[shape_name]
     if shape.kind == "train":
         return dryrun_train(arch, shape_name, multi_pod=multi_pod, algo=algo,
                             wire=wire, topology=topology, drop_rate=drop_rate,
-                            drop_salt=drop_salt, straggler=straggler)
+                            drop_salt=drop_salt, straggler=straggler,
+                            gamma=gamma)
     return dryrun_serve(arch, shape_name, multi_pod=multi_pod)
 
 
 def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
                  wire: str = "quant:8", topology: str = "ring",
                  steps: int = 2, drop_rate: float = 0.0, drop_salt: int = 0,
-                 straggler: float = 0.0) -> Dict[str, Any]:
+                 straggler: float = 0.0, gamma: float = 0.5) -> Dict[str, Any]:
     """Host-backend smoke: the dryrun machinery end to end on a reduced config
     and a small forced-device mesh (REPRO_DRYRUN_DEVICES=8), then *execute*
     ``steps`` real steps of the compiled program — the demo surface CI runs so
@@ -322,11 +327,12 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
     model = build_model(cfg)
     opt = sgd()
     gossip = make_gossip_plan(topology, n)
-    codec = make_wire_format(wire) if algo in ("naive", "dcd", "ecd") else None
+    codec = make_wire_format(wire) \
+        if algo in ("naive", "dcd", "ecd", "choco", "deepsqueeze") else None
     drop = make_drop_spec(drop_rate, salt=drop_salt)
     step = make_dist_train_step(lambda p, b: model.loss(p, b, remat=True),
                                 algo, opt, codec, gossip, constant(1e-2),
-                                mesh=None, drop=drop)
+                                mesh=None, drop=drop, gamma=gamma)
     shape = InputShape("tiny", "train", 64, 2 * n)
     p_sds = params_specs(cfg)
     state_sds = jax.eval_shape(
@@ -366,7 +372,11 @@ def main():
     ap.add_argument("--shape", choices=list(SHAPES), action="append")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--algo", default="dcd",
-                    choices=["cpsgd", "dpsgd", "naive", "dcd", "ecd"])
+                    choices=["cpsgd", "dpsgd", "naive", "dcd", "ecd",
+                             "choco", "deepsqueeze"])
+    ap.add_argument("--gamma", type=float, default=0.5,
+                    help="CHOCO consensus stepsize in (0, 1] (other algorithms "
+                         "ignore it)")
     ap.add_argument("--wire", default="quant:8",
                     help="gossip wire-format spec for make_wire_format, e.g. "
                          "quant:8, quant:4:block=1024, sparse:0.25:topk, fp16")
@@ -389,7 +399,8 @@ def main():
         arch = (args.arch or ["granite-3-2b"])[0]
         rec = dryrun_smoke(arch, algo=args.algo, wire=args.wire,
                            topology=args.topology, drop_rate=args.drop_rate,
-                           drop_salt=args.drop_salt, straggler=args.straggler)
+                           drop_salt=args.drop_salt, straggler=args.straggler,
+                           gamma=args.gamma)
         if args.json:
             with open(args.json, "a") as f:
                 f.write(json.dumps(rec) + "\n")
@@ -405,7 +416,8 @@ def main():
                 rec = dryrun(arch, shape, multi_pod=args.multi_pod,
                              algo=args.algo, wire=args.wire,
                              topology=args.topology, drop_rate=args.drop_rate,
-                             drop_salt=args.drop_salt, straggler=args.straggler)
+                             drop_salt=args.drop_salt, straggler=args.straggler,
+                             gamma=args.gamma)
                 print(f"[OK] {key}: bottleneck={rec['bottleneck']} "
                       f"t=({rec['t_compute_s']:.2e},{rec['t_memory_s']:.2e},"
                       f"{rec['t_collective_s']:.2e})s "

@@ -43,8 +43,9 @@ from repro.optim.schedules import linear_warmup_cosine
 @dataclasses.dataclass
 class TrainConfig:
     arch: Optional[str] = None          # assigned arch id, or None for custom cfg
-    algo: str = "dcd"                   # cpsgd | dpsgd | naive | dcd | ecd
+    algo: str = "dcd"                   # cpsgd | dpsgd | naive | dcd | ecd | choco | deepsqueeze
     wire: str = "quant:8"               # gossip wire-format spec (make_wire_format)
+    gamma: float = 0.5                  # CHOCO consensus stepsize, in (0, 1]
     topology: str = "ring"              # gossip plan name (make_gossip_plan)
     n_nodes: int = 8
     seq_len: int = 256
@@ -66,12 +67,13 @@ def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
     model = build_model(cfg)
     opt = make_optimizer(tc.optimizer, **({"weight_decay": 0.01} if tc.optimizer == "adamw" else {}))
     plan = make_gossip_plan(tc.topology, tc.n_nodes)
-    wire = make_wire_format(tc.wire) if tc.algo in ("naive", "dcd", "ecd") else None
+    wire = make_wire_format(tc.wire) \
+        if tc.algo in ("naive", "dcd", "ecd", "choco", "deepsqueeze") else None
     sched = linear_warmup_cosine(tc.lr, tc.warmup, tc.steps)
     drop = make_drop_spec(tc.drop_rate, salt=tc.drop_salt)
     loss_fn = lambda p, b: model.loss(p, b)
     step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, wire, plan, sched,
-                                           drop=drop))
+                                           drop=drop, gamma=tc.gamma))
 
     params0 = model.init(jax.random.key(tc.seed))
     state = init_dist_state(tc.algo, params0, plan, opt, drop=drop)

@@ -99,7 +99,8 @@ def expected_payloads(degree: float, drop_rate: float = 0.0) -> float:
 
 def strategies_for(model_bytes: float, n: int, wire,
                    plan: Optional[object] = None,
-                   drop_rate: float = 0.0) -> Dict[str, CommStrategy]:
+                   drop_rate: float = 0.0,
+                   algo: Optional[str] = None) -> Dict[str, CommStrategy]:
     """Strategies whose low-precision wire bits come from the actual payload
     containers: ``wire`` is anything with a measured ``wire_bits_per_element``
     — a :class:`~repro.distributed.wire.WireFormat` or a compressor view —
@@ -126,10 +127,19 @@ def strategies_for(model_bytes: float, n: int, wire,
     full round count (a synchronous gossip round barrier happens whether or
     not its payload arrives).  The AllReduce baselines model the reliable
     datacenter fabric and never drop.  At ``drop_rate=0`` every figure is
-    bit-identical to the seed model."""
+    bit-identical to the seed model.
+
+    ``algo`` refines the ``decentralized_lp`` payload charge per algorithm:
+    the replica/estimate trackers (dcd, ecd, choco — CHOCO's x-hat exchange
+    rolls one compressed diff per union-shift estimate tree, exactly like a
+    DCD replica) pay ``replica_payloads``; the stateless compressed gossips
+    (naive, deepsqueeze) pay the per-round ``degree``.  ``algo=None`` keeps
+    the historical replica-tracking charge."""
     degree = 2 if plan is None else int(plan.degree)
-    lp_degree = degree if plan is None else \
-        int(getattr(plan, "replica_payloads", degree))
+    if plan is None or algo in ("naive", "deepsqueeze", "dpsgd"):
+        lp_degree = degree
+    else:
+        lp_degree = int(getattr(plan, "replica_payloads", degree))
     out = strategies(model_bytes, n,
                      wire_bits=float(wire.wire_bits_per_element()),
                      degree=degree, lp_degree=lp_degree)

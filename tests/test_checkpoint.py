@@ -155,6 +155,65 @@ def test_dist_state_checkpoint_roundtrip_failure_state(tmp_path):
     _assert_state_equal(state, restored)
 
 
+@pytest.mark.parametrize("algo,topo", [("choco", "torus"), ("choco", "ring"),
+                                       ("deepsqueeze", "chain")])
+def test_error_feedback_state_checkpoint_roundtrip(tmp_path, algo, topo):
+    """Satellite acceptance: the error-feedback aux trees — CHOCO's plan-keyed
+    x-hat estimates (``hat_self`` + ``hat{s:+d}`` per union shift) and
+    DeepSqueeze's sender-side residual (``err_self``) — round-trip bit-exactly
+    and a resumed run continues the exact trajectory (the 1-bit sign encode is
+    deterministic, so the resumed wire words match bit for bit)."""
+    from repro.distributed.gossip import as_schedule
+    from repro.distributed.wire import SignWire
+
+    n, d = 16, 32
+    plan = make_gossip_plan(topo, n)
+    opt = adamw()
+    step = jax.jit(make_dist_train_step(_toy_loss, algo, opt,
+                                        SignWire(block=128), plan,
+                                        constant(0.05), gamma=0.7))
+    state = init_dist_state(algo, jnp.zeros((d,)), plan, opt)
+    for t in range(3):
+        state, _ = step(state, _toy_batch(jax.random.key(t), n, d=d))
+    union = as_schedule(plan).shift_union
+    if algo == "choco":
+        assert set(state.aux) == {"hat_self"} | \
+            {f"hat{s:+d}" for s in union}
+    else:
+        assert set(state.aux) == {"err_self"}
+
+    ckpt = str(tmp_path / "ckpt")
+    save(ckpt, 3, state, metadata={"algo": algo, "topology": plan.name})
+    assert latest_step(ckpt) == 3
+    restored, manifest = restore(
+        ckpt, init_dist_state(algo, jnp.zeros((d,)), plan, opt), 3)
+    assert manifest["metadata"]["algo"] == algo
+    _assert_state_equal(state, restored)
+
+    batch = _toy_batch(jax.random.key(99), n, d=d)
+    cont, _ = step(state, batch)
+    cont_r, _ = step(restored, batch)
+    _assert_state_equal(cont, cont_r)
+
+
+def test_checkpoint_rejects_mismatched_choco_topology():
+    """Restoring a ring CHOCO checkpoint into a torus-shaped state fails
+    loudly: the torus plan's estimate names (hat+4) don't exist in the ring
+    checkpoint — same no-silent-splicing contract as the DCD replicas."""
+    import tempfile
+
+    from repro.distributed.wire import SignWire  # noqa: F401  (parity import)
+
+    n, d = 16, 8
+    state = init_dist_state("choco", jnp.zeros((d,)), n, sgd())   # ring aux
+    with tempfile.TemporaryDirectory() as tmp:
+        save(tmp, 1, state)
+        torus_like = init_dist_state("choco", jnp.zeros((d,)),
+                                     make_gossip_plan("torus", n), sgd())
+        with pytest.raises(KeyError, match="hat"):
+            restore(tmp, torus_like, 1)
+
+
 def test_checkpoint_rejects_mismatched_drop_salt():
     """Satellite acceptance: restoring a drop-salted checkpoint into a state
     built with a DIFFERENT drop salt fails loudly — the freshness aux keys
