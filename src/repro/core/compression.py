@@ -386,6 +386,34 @@ class SignCompressor(Compressor):
         return 1.0 / self.block_size
 
 
+@dataclasses.dataclass(frozen=True)
+class WireViewCompressor(Compressor):
+    """Generic stacked view over ANY wire format object.
+
+    The named compressor classes above exist for their paper-facing bounds
+    (``alpha_bound``/``delta_bound``); a format without such bounds — e.g. the
+    per-leaf :class:`~repro.distributed.wire.AdaptiveWire` combinator — still
+    needs a stacked view for :func:`compressor_for`.  Unlike the base class,
+    ``compress``/``decompress`` do NOT flatten the leaf: shape-routed formats
+    must see the real leaf shape, and ``encode``/``decode`` are shape-agnostic
+    for every registered format (blocking is along the last dim only)."""
+
+    wire_obj: WireFormat = dataclasses.field(default_factory=IdentityWire)
+    salt: int = 0
+
+    name: str = "wire-view"
+
+    @property
+    def wire(self) -> WireFormat:
+        return self.wire_obj
+
+    def compress(self, key: jax.Array, x: jax.Array) -> Payload:
+        return self.wire.encode(x, self._seed(key))
+
+    def decompress(self, payload: Payload, like: jax.ShapeDtypeStruct) -> jax.Array:
+        return self.wire.decode(payload, like)
+
+
 def measured_alpha(comp: Compressor, key: jax.Array, z: jax.Array, n_samples: int = 16) -> float:
     """Monte-Carlo estimate of ``||C(z)-z|| / ||z||`` for a given input."""
     keys = jax.random.split(key, n_samples)
@@ -413,7 +441,7 @@ def compressor_for(wire, salt: int = 0) -> Compressor:
         return HalfPrecisionCompressor(salt=salt)
     if isinstance(w, IdentityWire):
         return IdentityCompressor(salt=salt)
-    raise TypeError(f"no stacked view registered for wire format {w!r}")
+    return WireViewCompressor(wire_obj=w, salt=salt)
 
 
 REGISTRY = {

@@ -143,6 +143,55 @@ def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
                      step=jnp.zeros((), jnp.int32))
 
 
+def rekey_dist_state(state: DistState, algo: str, plan, aux_dtype=None,
+                     drop=None) -> DistState:
+    """Re-key the gossip aux trees for a NEW ``{plan, wire}`` at a phase
+    boundary (``launch/train.py --phase-plan``), keeping params, optimizer
+    moments and the step counter.
+
+    Switching plan or wire mid-training invalidates the aux trees twice
+    over: the shift-union key set changes with the plan, and the
+    replica/estimate *values* encode the compression history of the old
+    wire.  The honest reset is a **resync**: every replica/estimate becomes
+    the exact current neighbor params (``roll(X, s)`` — one full-precision
+    payload round on the real network, which is what a deployment pays at a
+    phase switch), DeepSqueeze residuals restart at zero, and degraded-mode
+    freshness restarts at fully-fresh.  From there the differential
+    invariants of the new phase hold exactly as from ``init_dist_state`` —
+    a stacked :class:`~repro.core.algorithms.GossipReference` initialised
+    from the same resynced state tracks the sharded runtime at the usual
+    atol (tests/test_adaptive.py pins the composite trajectory)."""
+    sched = as_schedule(_resolve_plan(plan, None))
+    drop = make_drop_spec(drop)
+    X = state.params
+
+    def cast(tree):
+        if aux_dtype is None:
+            return tree
+        return jax.tree.map(
+            lambda l: l.astype(aux_dtype) if l.dtype == jnp.float32 else l,
+            tree)
+
+    n_nodes = sched.n
+    aux: Dict[str, Any] = {}
+    if algo == "dcd":
+        aux = {f"rep{s:+d}": cast(_roll(X, s)) for s in sched.shift_union}
+    elif algo == "ecd":
+        aux = {"tilde_self": cast(X)}
+        aux.update({f"tilde{s:+d}": cast(_roll(X, s))
+                    for s in sched.shift_union})
+    elif algo == "choco":
+        aux = {"hat_self": cast(X)}
+        aux.update({f"hat{s:+d}": cast(_roll(X, s))
+                    for s in sched.shift_union})
+    elif algo == "deepsqueeze":
+        aux = {"err_self": jax.tree.map(jnp.zeros_like, cast(X))}
+    if drop is not None and algo in ("dcd", "ecd", "choco"):
+        aux.update({fresh_key(s, drop.salt): jnp.ones((n_nodes,), jnp.float32)
+                    for s in sched.shift_union})
+    return state._replace(aux=aux)
+
+
 # --------------------------------------------------------------- the step
 
 def _make_decode_axpy(wire: WireFormat, mesh) -> Optional[Callable]:

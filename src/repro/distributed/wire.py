@@ -34,6 +34,9 @@ Registered implementations (``make_wire_format`` specs):
   bits/element at block 1024; biased — the error-feedback algorithms' regime).
 * ``fp16``     — half-precision cast (deterministic, 16 wire bits/element).
 * ``identity`` — no-op (full-precision wire; recovers exact D-PSGD).
+* ``adaptive`` — per-leaf combinator: routes each leaf to a ``small=`` or
+  ``large=`` sub-format by per-replica element count, with optional
+  ``leaf.<pattern>=`` per-leaf-path overrides (see :class:`AdaptiveWire`).
 
 Spec strings are ``name[:arg[:arg...]]`` where each arg is ``key=value`` or a
 positional value (``quant:4`` == ``quant:bits=4``; ``sparse:0.25:topk`` ==
@@ -645,6 +648,252 @@ class IdentityWire(WireFormat):
         return payload["values"].astype(like.dtype)
 
 
+# --------------------------------------------------------- adaptive combinator
+
+def leaf_path_str(path) -> str:
+    """``decoder/kernel``-style leaf path — the SAME naming the checkpoint
+    manifests use (``repro.checkpoint``), so the patterns that select a leaf
+    in an ``adaptive`` spec select the same leaf in a saved DistState."""
+    def one(p):
+        if hasattr(p, "key"):
+            return str(p.key)
+        if hasattr(p, "idx"):
+            return str(p.idx)
+        if hasattr(p, "name"):
+            return str(p.name)
+        return str(p)
+    return "/".join(one(p) for p in path)
+
+
+def routed_size(shape) -> int:
+    """Per-replica element count of a leaf — what ``adaptive`` thresholds
+    compare against.  Every runtime surface (the sharded runtime, the stacked
+    reference, the dryrun accounting) presents leaves *stacked* along a
+    leading node axis, so the leading dim is excluded: a 64-wide bias is
+    "small" at any node count, and the routing decision is identical outside
+    the jit, inside ``shard_map`` (where the leading dim is the per-shard
+    slab), and under ``eval_shape``.  Rank-1 leaves are taken whole — the
+    stacked form of a scalar parameter."""
+    if len(shape) > 1:
+        return int(np.prod(shape[1:], dtype=np.int64))
+    return int(np.prod(shape, dtype=np.int64)) if shape else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveWire(WireFormat):
+    """Per-leaf size-adaptive combinator: one wire format per *leaf*, not per
+    tree.
+
+    Routing (static — shapes are compile-time, so jit sees one fixed codec
+    per leaf, and the compiled collective-permutes move mixed payloads):
+
+    1. ``leaf.<pattern>=`` overrides first: a leaf whose ``/``-joined path
+       (:func:`leaf_path_str` — checkpoint-manifest naming) matches an
+       override's fnmatch pattern uses that sub-format, first match wins.
+    2. Otherwise by size: leaves with fewer than ``threshold`` per-replica
+       elements (:func:`routed_size` — the leading stacked node axis is
+       excluded) encode through ``small``, the rest through ``large``.
+
+    Spec grammar (sub-specs may themselves contain ``:``/``,`` — every part
+    after a ``small=`` / ``large=`` / ``leaf.<pattern>=`` key that does not
+    start a new key is absorbed into that key's sub-spec):
+
+        adaptive:<threshold>[:small=<spec>][:large=<spec>][:leaf.<pat>=<spec>]*
+        adaptive:4096:small=fp16:large=quant:4
+        adaptive:8192:large=sparse:0.25:topk:leaf.embed*=quant:bits=3,block=1024
+
+    Everything else is inherited unchanged: the tree plumbing derives the SAME
+    ``(step, salt, leaf index)`` seeds as every other format (payloads stay
+    bit-identical between the sharded runtime and the stacked
+    :class:`~repro.core.algorithms.GossipReference`), the aux/state trees of
+    DCD/ECD/CHOCO/DeepSqueeze are keyed per shift exactly as today (the codec
+    never touches them), and ``wire_nbytes`` measures each leaf through its
+    routed sub-format's real containers via ``eval_shape``.  Nesting adaptive
+    inside adaptive is refused — routing must stay a single static decision.
+
+    The per-leaf methods (``encode``/``decode``/``decode_axpy``) see no path,
+    so direct per-leaf calls route by size alone; path overrides apply on the
+    tree-level surfaces (``encode_tree`` & co.), which is where both runtimes
+    live."""
+
+    threshold: int = 4096
+    small: Any = "fp16"            # WireFormat | spec str (normalized in init)
+    large: Any = "quant:4"
+    overrides: Tuple[Tuple[str, Any], ...] = ()   # ((fnmatch pattern, wire)..)
+
+    name: ClassVar[str] = "adaptive"
+
+    def __post_init__(self):
+        assert int(self.threshold) >= 0, self.threshold
+        object.__setattr__(self, "threshold", int(self.threshold))
+        for fld in ("small", "large"):
+            w = make_wire_format(getattr(self, fld))
+            assert not isinstance(w, AdaptiveWire), \
+                "adaptive wire formats do not nest"
+            object.__setattr__(self, fld, w)
+        ov = self.overrides
+        if isinstance(ov, dict):
+            ov = tuple(ov.items())
+        norm = []
+        for pat, w in ov:
+            w = make_wire_format(w)
+            assert not isinstance(w, AdaptiveWire), \
+                "adaptive wire formats do not nest"
+            norm.append((str(pat), w))
+        object.__setattr__(self, "overrides", tuple(norm))
+
+    # --- routing ----------------------------------------------------------
+    def route_size(self, shape) -> WireFormat:
+        """Size-only routing (what the per-leaf protocol can see)."""
+        return self.small if routed_size(shape) < self.threshold else self.large
+
+    def route(self, path: str, shape) -> WireFormat:
+        """Full routing: first matching ``leaf.<pattern>=`` override, else by
+        per-replica size."""
+        import fnmatch
+
+        for pat, w in self.overrides:
+            if fnmatch.fnmatchcase(path, pat):
+                return w
+        return self.route_size(shape)
+
+    def leaf_wires(self, tree: Any) -> Tuple[Tuple[str, WireFormat], ...]:
+        """``(path, routed sub-format)`` per leaf in flatten order — the
+        audit surface (dryrun records ``wire_spec_per_leaf`` from it)."""
+        return tuple(
+            (leaf_path_str(p), self.route(leaf_path_str(p), leaf.shape))
+            for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0])
+
+    # --- per-leaf protocol (size-routed: no path at this level) -----------
+    def encode(self, leaf: jax.Array, seed: jax.Array) -> Payload:
+        return self.route_size(leaf.shape).encode(leaf, seed)
+
+    def decode(self, payload: Payload, like) -> jax.Array:
+        return self.route_size(like.shape).decode(payload, like)
+
+    def decode_axpy(self, payload: Payload, acc: jax.Array, weight,
+                    acc_weight=1.0) -> jax.Array:
+        return self.route_size(acc.shape).decode_axpy(payload, acc, weight,
+                                                      acc_weight)
+
+    # --- tree-level plumbing: path-aware, same (step, salt, leaf) seeding --
+    def encode_tree(self, tree: Any, step: jax.Array, salt: int):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        return treedef, [
+            self.route(leaf_path_str(p), leaf.shape).encode(
+                leaf, leaf_seed(step, salt, li))
+            for li, (p, leaf) in enumerate(flat)]
+
+    def decode_tree(self, treedef, payloads, like_tree: Any) -> Any:
+        flat = jax.tree_util.tree_flatten_with_path(like_tree)[0]
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [self.route(leaf_path_str(p), like.shape).decode(pl, like)
+             for pl, (p, like) in zip(payloads, flat)])
+
+    def decode_axpy_tree(self, treedef, payloads, acc_tree: Any, weight,
+                         acc_weight=1.0) -> Any:
+        flat = jax.tree_util.tree_flatten_with_path(acc_tree)[0]
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [self.route(leaf_path_str(p), acc.shape).decode_axpy(
+                pl, acc, weight, acc_weight)
+             for pl, (p, acc) in zip(payloads, flat)])
+
+    # --- accounting / display --------------------------------------------
+    def wire_bits_per_element(self, shape=None) -> float:
+        """With a shape: measured on that leaf through its size-routed
+        sub-format (a 64-element bias measures 16 b/e under ``small=fp16``
+        while the matmul leaves measure the ``large=`` figure).  With no
+        shape: the ``large`` route's asymptotic figure — model wire traffic
+        is dominated by the large leaves, so that is the honest single
+        number for netsim costing (``wire_nbytes`` on the real tree remains
+        the exact per-leaf account)."""
+        if shape is None:
+            return self.large.wire_bits_per_element()
+        return self.route_size(shape).wire_bits_per_element(shape)
+
+    @property
+    def packed(self) -> bool:
+        """Fused-capable iff any routed sub-format is; each sub-format's own
+        ``decode_axpy`` still applies its own 128-lane kernel gate per leaf."""
+        return self.small.packed or self.large.packed or \
+            any(w.packed for _, w in self.overrides)
+
+    @property
+    def wire_format(self) -> str:
+        ov = "".join(f";{pat}={w.wire_format}" for pat, w in self.overrides)
+        return (f"adaptive<{self.threshold};small={self.small.wire_format};"
+                f"large={self.large.wire_format}{ov}>")
+
+    @staticmethod
+    def parse_spec_args(args) -> Dict[str, Any]:
+        """Spec-arg parser for :func:`make_wire_format` (hooked via the
+        ``parse_spec_args`` attribute): sub-specs contain ``:`` and ``,``, so
+        every part that does not start a reserved key
+        (``threshold=``/``small=``/``large=``/``leaf.<pat>=``) is absorbed
+        into the preceding key's sub-spec — ``adaptive:4096:large=quant:4``
+        keeps the ``4`` with ``quant``."""
+        kwargs: Dict[str, Any] = {}
+        overrides: list = []
+        current: Optional[str] = None    # key whose sub-spec absorbs parts
+        pos = 0
+        for part in args:
+            key = part.split("=", 1)[0] if "=" in part else None
+            reserved = key in ("threshold", "small", "large") or \
+                (key is not None and key.startswith("leaf."))
+            if reserved:
+                val = part.split("=", 1)[1]
+                if key.startswith("leaf."):
+                    overrides.append([key[len("leaf."):], val])
+                    current = "__override__"
+                elif key == "threshold":
+                    kwargs["threshold"] = int(val)
+                    current = None
+                else:
+                    kwargs[key] = val
+                    current = key
+            elif current == "__override__":
+                overrides[-1][1] += ":" + part
+            elif current is not None:
+                kwargs[current] += ":" + part
+            else:
+                if pos >= 1:
+                    raise ValueError(
+                        f"adaptive spec takes one positional arg (threshold); "
+                        f"unexpected {part!r}")
+                kwargs["threshold"] = int(part)
+                pos += 1
+        if overrides:
+            kwargs["overrides"] = tuple((p, s) for p, s in overrides)
+        return kwargs
+
+
+def wire_spec(w: WireFormat) -> str:
+    """Canonical spec string of a registered wire format — the inverse of
+    :func:`make_wire_format` (``make_wire_format(wire_spec(w)) == w``), used
+    by the netsim controller to emit ``--wire`` flags and by dryrun records."""
+    if isinstance(w, QuantWire):
+        s = f"quant:{w.bits}:{w.block}"
+        return s if w.pack is None else s + f":pack={str(w.pack).lower()}"
+    if isinstance(w, SparseWire):
+        s = f"sparse:{w.p:g}:{w.mode}:{w.block}"
+        return s if w.value_dtype == "float32" \
+            else s + f":value_dtype={w.value_dtype}"
+    if isinstance(w, SignWire):
+        return f"sign:{w.scale}:{w.block}"
+    if isinstance(w, Fp16Wire):
+        return "fp16"
+    if isinstance(w, IdentityWire):
+        return "identity"
+    if isinstance(w, AdaptiveWire):
+        parts = [f"adaptive:{w.threshold}", f"small={wire_spec(w.small)}",
+                 f"large={wire_spec(w.large)}"]
+        parts += [f"leaf.{pat}={wire_spec(sub)}" for pat, sub in w.overrides]
+        return ":".join(parts)
+    raise TypeError(f"no canonical spec for wire format {w!r}")
+
+
 # ------------------------------------------------------------------- registry
 
 # name -> (constructor, positional spec-arg names in order)
@@ -665,6 +914,7 @@ register_wire_format("sparse", SparseWire, positional=("p", "mode", "block"))
 register_wire_format("sign", SignWire, positional=("scale", "block"))
 register_wire_format("fp16", Fp16Wire)
 register_wire_format("identity", IdentityWire)
+register_wire_format("adaptive", AdaptiveWire, positional=("threshold",))
 
 
 def _coerce(text: str):
@@ -683,13 +933,31 @@ def make_wire_format(spec, **overrides) -> WireFormat:
 
     ``spec`` is a registered instance (returned as-is, or
     ``dataclasses.replace``d with ``overrides``), or a spec string
-    ``name[:arg[:arg...]]`` with ``key=value`` or positional args:
+    ``name[:arg[:arg...]]`` with ``key=value`` or positional args.  Every
+    registered spec:
+
+    * ``quant[:bits[:block]]`` — stochastic ``bits``-bit quantization
+      (``quant:4``; packed stream words for bits 2..7).
+    * ``sparse[:p[:mode[:block]]]`` — fixed-capacity random-k/top-k
+      (``sparse:0.25:topk``).
+    * ``sign[:scale[:block]]`` — 1-bit sign + per-block magnitude scale
+      (``sign`` ≈ 1.03 measured bits/element).
+    * ``fp16`` — half-precision cast.
+    * ``identity`` — full-precision no-op (exact D-PSGD).
+    * ``adaptive:<threshold>[:small=<spec>][:large=<spec>][:leaf.<pat>=<spec>]``
+      — per-leaf combinator routing by per-replica element count with
+      fnmatch path overrides (``adaptive:4096:small=fp16:large=quant:4``);
+      see :class:`AdaptiveWire`.
 
     >>> make_wire_format("quant:4")             # QuantWire(bits=4)
     >>> make_wire_format("quant:bits=3,block=1024")
     >>> make_wire_format("sparse:0.25:topk")    # SparseWire(p=.25, mode="topk")
-    >>> make_wire_format("fp16")
-    """
+    >>> make_wire_format("adaptive:4096:small=fp16:large=quant:4")
+
+    A format whose constructor exposes a ``parse_spec_args`` staticmethod
+    (``AdaptiveWire`` does — its sub-specs contain ``:``/``,``) parses its own
+    spec args; everything else gets the standard positional/``key=value``
+    split."""
     if isinstance(spec, WireFormat):
         return dataclasses.replace(spec, **overrides) if overrides else spec
     if not isinstance(spec, str):
@@ -700,6 +968,11 @@ def make_wire_format(spec, **overrides) -> WireFormat:
         raise ValueError(
             f"unknown wire format {name!r}; registered: {sorted(WIRE_FORMATS)}")
     ctor, positional = WIRE_FORMATS[name]
+    parse = getattr(ctor, "parse_spec_args", None)
+    if parse is not None:
+        kwargs = parse(args)
+        kwargs.update(overrides)
+        return ctor(**kwargs)
     kwargs: Dict[str, Any] = {}
     pos = 0
     for arg in args:

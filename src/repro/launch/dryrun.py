@@ -113,6 +113,40 @@ def _failure_record(codec, gossip, algo: str, p_sds, drop,
     return rec
 
 
+def _wire_spec_per_leaf(codec, tree) -> Dict[str, str]:
+    """Leaf path -> canonical wire spec actually used for that leaf.  For the
+    ``adaptive`` combinator this is the audit trail of its per-leaf routing
+    decisions (small/large/override); uniform formats record the same spec on
+    every leaf — the record stays greppable either way."""
+    from repro.distributed.wire import AdaptiveWire, leaf_path_str, wire_spec
+    if isinstance(codec, AdaptiveWire):
+        return {path: wire_spec(w) for path, w in codec.leaf_wires(tree)}
+    spec = wire_spec(codec)
+    return {leaf_path_str(p): spec
+            for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def _controller_record(codec, gossip, algo: str, p_sds, drop,
+                       straggler: float, total_steps: int = 1000
+                       ) -> Dict[str, Any]:
+    """What the closed-loop controller would pick for this run's link model —
+    recorded per dryrun so the choice (and the figures it was derived from)
+    is auditable after the fact, next to the measured wire figures it would
+    act on."""
+    if codec is None:
+        return {}
+    from repro.netsim import BEST_NETWORK, LinkModel, plan_phases
+    rate = drop.rate if drop is not None else 0.0
+    link = LinkModel.from_condition(BEST_NETWORK, straggler=straggler,
+                                    drop_rate=rate)
+    pplan = plan_phases(4.0 * _tree_size(p_sds), gossip.n, link,
+                        total_steps=total_steps, algo=algo)
+    return {"controller": {
+        "link": link.describe(), "total_steps": total_steps,
+        "phase_plan": pplan.describe(), "phases": pplan.records(),
+    }}
+
+
 def _state_shardings(state_sds, mesh, n_routed):
     """Shardings for the full DistState: param-like trees stacked over node."""
     def shard_tree(tree):
@@ -183,6 +217,7 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
                         multi_pod, n, n_chips, cfg, p_sds, state_sds,
                         batch_sds, step, compiled, t0, t1, t2)
     rec.update(_failure_record(codec, gossip, algo, p_sds, drop, straggler))
+    rec.update(_controller_record(codec, gossip, algo, p_sds, drop, straggler))
     return rec
 
 
@@ -208,6 +243,7 @@ def _train_record(arch, shape_name, shape, algo, wire, codec, gossip, multi_pod,
             "wire_payload_bytes": payload_bytes,
             "wire_bits_per_element": round(8.0 * payload_bytes / stacked_elems, 4),
             "wire_format": codec.wire_format,
+            "wire_spec_per_leaf": _wire_spec_per_leaf(codec, state_sds.params),
         }
     return {
         "arch": arch, "shape": shape_name, "kind": "train", "algo": algo,
@@ -357,11 +393,13 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
         "steps": steps, "loss": float(metrics["loss"]),
     }
     rec.update(_failure_record(codec, gossip, algo, p_sds, drop, straggler))
+    rec.update(_controller_record(codec, gossip, algo, p_sds, drop, straggler))
     if codec is not None:
         payload_bytes = codec.wire_nbytes(state_sds.params)
         rec["wire_bits_per_element"] = round(
             8.0 * payload_bytes / _tree_size(state_sds.params), 4)
         rec["wire_format"] = codec.wire_format
+        rec["wire_spec_per_leaf"] = _wire_spec_per_leaf(codec, state_sds.params)
     print(f"[SMOKE OK] {json.dumps(rec)}", flush=True)
     return rec
 
@@ -379,7 +417,8 @@ def main():
                          "ignore it)")
     ap.add_argument("--wire", default="quant:8",
                     help="gossip wire-format spec for make_wire_format, e.g. "
-                         "quant:8, quant:4:block=1024, sparse:0.25:topk, fp16")
+                         "quant:8, quant:4:block=1024, sparse:0.25:topk, fp16, "
+                         "adaptive:4096:small=fp16:large=quant:4")
     ap.add_argument("--topology", default="ring", choices=list(GOSSIP_TOPOLOGIES))
     ap.add_argument("--drop-rate", type=float, default=0.0,
                     help="per-edge per-round gossip drop probability (0 = "

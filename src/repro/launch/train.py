@@ -6,12 +6,19 @@ node axis shards over the (pod x data) axes per the TrainPlan.  Used by
 examples/train_lm.py for the ~100M-model few-hundred-step runs.
 
 The gossip wire format and topology are specs, not flags-per-codec:
-``--wire quant:8`` / ``--wire sparse:0.25:topk`` / ``--wire fp16`` pick any
-registered :class:`~repro.distributed.wire.WireFormat`; ``--topology`` picks
-any :func:`~repro.distributed.gossip.make_gossip_plan` name (ring, chain,
+``--wire quant:8`` / ``--wire sparse:0.25:topk`` / ``--wire fp16`` /
+``--wire adaptive:4096:small=fp16:large=quant:4`` pick any registered
+:class:`~repro.distributed.wire.WireFormat`; ``--topology`` picks any
+:func:`~repro.distributed.gossip.make_gossip_plan` name (ring, chain,
 torus, torus2d, star, full — or the round schedules ``full_logn``, the dense
 average at O(log n) permutes per step, and ``exp``, the time-varying one-peer
 exponential graph at ONE permute per step).
+
+``--phase-plan "0@exp@sign;150@full_logn@quant:8"`` overrides both with a
+step-indexed schedule (:class:`~repro.netsim.controller.PhasePlan` — emit one
+with :func:`~repro.netsim.controller.plan_phases`): the jitted step is rebuilt
+at each boundary and the gossip aux trees resync to the new plan/wire via
+:func:`~repro.distributed.decentralized.rekey_dist_state`.
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ from repro.distributed.decentralized import (
     DistState,
     init_dist_state,
     make_dist_train_step,
+    rekey_dist_state,
 )
 from repro.distributed.failures import make_drop_spec
 from repro.distributed.gossip import make_gossip_plan
@@ -47,6 +55,7 @@ class TrainConfig:
     wire: str = "quant:8"               # gossip wire-format spec (make_wire_format)
     gamma: float = 0.5                  # CHOCO consensus stepsize, in (0, 1]
     topology: str = "ring"              # gossip plan name (make_gossip_plan)
+    phase_plan: Optional[str] = None    # "start@topology@wire;..." overrides wire+topology
     n_nodes: int = 8
     seq_len: int = 256
     global_batch: int = 32
@@ -63,43 +72,73 @@ class TrainConfig:
     reduced: bool = True                # use the reduced config (CPU-scale)
 
 
+GOSSIP_ALGOS = ("naive", "dcd", "ecd", "choco", "deepsqueeze")
+
+
 def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
+    from repro.netsim.controller import Phase, PhasePlan
+
     model = build_model(cfg)
     opt = make_optimizer(tc.optimizer, **({"weight_decay": 0.01} if tc.optimizer == "adamw" else {}))
-    plan = make_gossip_plan(tc.topology, tc.n_nodes)
-    wire = make_wire_format(tc.wire) \
-        if tc.algo in ("naive", "dcd", "ecd", "choco", "deepsqueeze") else None
     sched = linear_warmup_cosine(tc.lr, tc.warmup, tc.steps)
     drop = make_drop_spec(tc.drop_rate, salt=tc.drop_salt)
     loss_fn = lambda p, b: model.loss(p, b)
-    step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, wire, plan, sched,
-                                           drop=drop, gamma=tc.gamma))
+
+    # one static {topology, wire} is just a one-phase plan — the phase loop
+    # below IS the old single-segment loop in that case
+    pplan = PhasePlan.parse(tc.phase_plan) if tc.phase_plan \
+        else PhasePlan((Phase(0, tc.topology, tc.wire),))
+    segments = pplan.segments(tc.steps)
+
+    def build_phase(phase: Phase):
+        plan = make_gossip_plan(phase.topology, tc.n_nodes)
+        wire = make_wire_format(phase.wire) if tc.algo in GOSSIP_ALGOS else None
+        step_fn = jax.jit(make_dist_train_step(loss_fn, tc.algo, opt, wire,
+                                               plan, sched, drop=drop,
+                                               gamma=tc.gamma))
+        return plan, step_fn
 
     params0 = model.init(jax.random.key(tc.seed))
-    state = init_dist_state(tc.algo, params0, plan, opt, drop=drop)
-
-    dc = DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len, global_batch=tc.global_batch,
-                    n_shards=tc.n_nodes, seed=tc.seed)
     start = 0
-    if tc.ckpt_dir and (s := latest_step(tc.ckpt_dir)) is not None:
-        state, manifest = restore(tc.ckpt_dir, state, s)
+    resume_step = latest_step(tc.ckpt_dir) if tc.ckpt_dir else None
+    # a checkpoint at step s was written while executing under the phase that
+    # governs step s-1 — the restore template must match THAT phase's aux keys
+    init_phase = pplan.phase_at(max(0, (resume_step or 0) - 1))
+    state = init_dist_state(tc.algo, params0,
+                            make_gossip_plan(init_phase.topology, tc.n_nodes),
+                            opt, drop=drop)
+    if resume_step is not None:
+        state, manifest = restore(tc.ckpt_dir, state, resume_step)
         start = manifest["step"]
         print(f"resumed from step {start}")
 
-    hist = {"step": [], "loss": [], "consensus": []}
+    dc = DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len, global_batch=tc.global_batch,
+                    n_shards=tc.n_nodes, seed=tc.seed)
+    hist = {"step": [], "loss": [], "consensus": [],
+            "phases": pplan.records()}
     t0 = time.time()
-    for t in range(start, tc.steps):
-        batch = stacked_node_batches(dc, t, cfg)
-        state, metrics = step_fn(state, batch)
-        if (t + 1) % tc.log_every == 0 or t == tc.steps - 1:
-            hist["step"].append(t + 1)
-            hist["loss"].append(float(metrics["loss"]))
-            hist["consensus"].append(float(metrics["consensus"]))
-            print(f"step {t+1:5d} loss={metrics['loss']:.4f} "
-                  f"consensus={metrics['consensus']:.3e} lr={metrics['lr']:.2e}",
-                  flush=True)
-        if tc.ckpt_dir and (t + 1) % tc.ckpt_every == 0:
-            save(tc.ckpt_dir, t + 1, state, metadata={"loss": float(metrics["loss"])})
+    for seg_start, seg_stop, phase in segments:
+        if seg_stop <= start:
+            continue
+        plan, step_fn = build_phase(phase)
+        if seg_start > 0 and seg_start >= start:
+            # phase boundary: resync aux to the new plan/wire (pure function
+            # of params, so resume-at-boundary == run-through-boundary)
+            state = rekey_dist_state(state, tc.algo, plan, drop=drop)
+            print(f"phase switch @ step {seg_start}: "
+                  f"topology={phase.topology} wire={phase.wire}", flush=True)
+        for t in range(max(seg_start, start), seg_stop):
+            batch = stacked_node_batches(dc, t, cfg)
+            state, metrics = step_fn(state, batch)
+            if (t + 1) % tc.log_every == 0 or t == tc.steps - 1:
+                hist["step"].append(t + 1)
+                hist["loss"].append(float(metrics["loss"]))
+                hist["consensus"].append(float(metrics["consensus"]))
+                print(f"step {t+1:5d} loss={metrics['loss']:.4f} "
+                      f"consensus={metrics['consensus']:.3e} lr={metrics['lr']:.2e}",
+                      flush=True)
+            if tc.ckpt_dir and (t + 1) % tc.ckpt_every == 0:
+                save(tc.ckpt_dir, t + 1, state, metadata={"loss": float(metrics["loss"])})
     hist["wall_s"] = time.time() - t0
     hist["final_loss"] = hist["loss"][-1]
     return hist

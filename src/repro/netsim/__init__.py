@@ -1,3 +1,7 @@
+from repro.netsim.controller import (
+    Phase, PhasePlan, candidate_fidelity, candidate_iter_time,
+    load_dryrun_records, plan_phases, plan_phases_measured, record_iter_time,
+)
 from repro.netsim.cost_model import (
     BEST_NETWORK, HIGH_LAT, LOW_BW, WORST,
     CommStrategy, LinkModel, NetworkCondition, comm_time, comm_time_tail,

@@ -38,6 +38,13 @@ synchronous round barrier — and hence the latency charge — remains), and
 stacked reference consume, so the simulator's failure trace is the same
 trace, not a statistical cousin.  With ``straggler=0`` and ``drop_rate=0``
 every figure is bit-identical to the point model above.
+
+These figures are no longer reporting-only: :mod:`repro.netsim.controller`
+closes the loop, scoring ``(topology, wire)`` candidates with exactly the
+:func:`strategies_for`/:func:`comm_time`/:func:`comm_time_tail` accounting
+below (or with measured dryrun JSONL records) and emitting the per-phase
+``{topology, wire}`` plan that ``launch/train.py --phase-plan`` executes —
+the model both prices a run after the fact and picks the next one.
 """
 from __future__ import annotations
 

@@ -1,0 +1,366 @@
+"""Adaptive per-leaf wire combinator + phase-plan control surface.
+
+The contract under test, layer by layer:
+
+- The ``adaptive:`` spec grammar round-trips: absorption parsing keeps
+  sub-spec ``:``/``,`` parts with their key (``large=quant:4`` does not
+  shed the ``4``), ``wire_spec`` is the exact inverse of
+  ``make_wire_format``, the frozen objects hash, and nesting adaptive
+  inside adaptive is refused.
+- Routing is static and per-leaf: below-threshold leaves (per-replica
+  element count — the leading stacked node axis is excluded) encode
+  through ``small``, the rest through ``large``, and ``leaf.<pattern>=``
+  fnmatch overrides win over size, first match first.
+- The differential tier: sharded {dcd, ecd} over a *pytree* of mixed
+  small/large leaves with an adaptive wire matches the stacked
+  :class:`~repro.core.algorithms.GossipReference` to atol 1e-5, with
+  bit-identical wire words (same (step, salt, leaf) seeds) eager vs jit.
+- A DistState whose aux trees carry mixed per-leaf payload history
+  round-trips through the checkpoint bit-exactly and resumes the exact
+  trajectory.
+- ``rekey_dist_state`` resyncs the aux trees at a ``--phase-plan``
+  boundary: replicas become exact current neighbor params under the NEW
+  plan's key set, params/moments/step survive untouched, and
+  checkpoint-restore-then-rekey reproduces the run-through-boundary
+  trajectory bitwise (what launch/train.py does on resume).
+- The :class:`~repro.netsim.controller.PhasePlan` grammar round-trips and
+  its step->phase lookup/segmentation is exact at the boundaries.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.core.algorithms import GossipReference
+from repro.distributed.decentralized import (
+    init_dist_state,
+    make_dist_train_step,
+    rekey_dist_state,
+)
+from repro.distributed.gossip import as_schedule, make_gossip_plan
+from repro.distributed.wire import (
+    AdaptiveWire,
+    Fp16Wire,
+    IdentityWire,
+    QuantWire,
+    make_wire_format,
+    routed_size,
+    wire_spec,
+)
+from repro.netsim.controller import Phase, PhasePlan
+from repro.optim import adamw, sgd
+from repro.optim.schedules import constant
+
+
+D_B, D_W = 32, 1024        # small (below threshold 128) / large leaf widths
+
+
+def _tree_loss(params, batch):
+    pred = batch["Ab"] @ params["bias"] + batch["Aw"] @ params["weight"]
+    loss = 0.5 * jnp.mean((pred - batch["b"]) ** 2)
+    return loss, {"xent": loss}
+
+
+def _tree_batch(key, n, m=16):
+    ka, kw, kb = jax.random.split(key, 3)
+    return {"Ab": jax.random.normal(ka, (n, m, D_B)),
+            "Aw": jax.random.normal(kw, (n, m, D_W)),
+            "b": jax.random.normal(kb, (n, m))}
+
+
+def _tree_params():
+    return {"bias": jnp.zeros((D_B,)), "weight": jnp.zeros((D_W,))}
+
+
+def _grads_for(params, batch):
+    def node(p, Ab, Aw, b):
+        return jax.grad(lambda q: 0.5 * jnp.mean(
+            (Ab @ q["bias"] + Aw @ q["weight"] - b) ** 2))(p)
+    return jax.vmap(node)(params, batch["Ab"], batch["Aw"], batch["b"])
+
+
+def _assert_state_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ----------------------------------------------------------- spec grammar
+
+def test_adaptive_spec_parse_and_hash():
+    """Absorption parsing keeps sub-spec parts with their key, the result is
+    the frozen (hashable) combinator, and defaults match the bare spec."""
+    w = make_wire_format("adaptive:4096:small=fp16:large=quant:4")
+    assert isinstance(w, AdaptiveWire) and w.threshold == 4096
+    assert w.small == Fp16Wire() and w.large == QuantWire(bits=4)
+    assert w == AdaptiveWire(threshold=4096, small="fp16", large="quant:4")
+    assert hash(w) == hash(make_wire_format(
+        "adaptive:4096:small=fp16:large=quant:4"))
+    # key=value inside a sub-spec survives absorption
+    w2 = make_wire_format("adaptive:8192:large=quant:bits=3,block=1024")
+    assert w2.large == QuantWire(bits=3, block=1024)
+    # defaults: threshold 4096, small=fp16, large=quant:4
+    assert make_wire_format("adaptive") == w
+
+
+def test_adaptive_wire_spec_roundtrip():
+    """``wire_spec`` is the exact inverse of ``make_wire_format`` — including
+    leaf-pattern overrides and non-default sub-spec kwargs."""
+    for spec in ("adaptive:4096:small=fp16:large=quant:4:32",
+                 "adaptive:128:small=sign:mean:128:large=sparse:0.25:topk:128",
+                 "adaptive:64:small=identity:large=quant:3:32"
+                 ":leaf.*bias*=fp16"):
+        w = make_wire_format(spec)
+        assert make_wire_format(wire_spec(w)) == w, spec
+    # canonical form itself is stable under one more round-trip
+    w = make_wire_format("adaptive:128:large=quant:bits=3,block=64")
+    assert wire_spec(make_wire_format(wire_spec(w))) == wire_spec(w)
+
+
+def test_adaptive_spec_rejections():
+    """Nesting is refused (routing must stay one static decision) and a
+    second positional arg is a loud error, not silently dropped."""
+    with pytest.raises(AssertionError, match="nest"):
+        make_wire_format("adaptive:128:large=adaptive:64")
+    with pytest.raises(AssertionError, match="nest"):
+        AdaptiveWire(small=AdaptiveWire())
+    with pytest.raises(ValueError, match="positional"):
+        make_wire_format("adaptive:128:64")
+
+
+# --------------------------------------------------------------- routing
+
+def test_adaptive_routes_per_leaf_by_stacked_size():
+    """Per-replica element count routes each leaf: the leading stacked node
+    axis is excluded, so a (n, 32) bias is small at ANY node count."""
+    w = make_wire_format("adaptive:128:small=fp16:large=quant:4:32")
+    assert routed_size((8, D_B)) == D_B and routed_size((8, D_W)) == D_W
+    assert routed_size((D_B,)) == D_B          # rank-1: taken whole
+    tree = {"bias": jnp.zeros((8, D_B)), "weight": jnp.zeros((8, D_W))}
+    got = dict(w.leaf_wires(tree))
+    assert got["bias"] == Fp16Wire()
+    assert got["weight"] == QuantWire(bits=4, block=32)
+    # and the per-leaf protocol agrees with the tree-level routing
+    assert w.route_size((8, D_B)) == Fp16Wire()
+    assert w.route_size((8, D_W)) == QuantWire(bits=4, block=32)
+
+
+def test_adaptive_leaf_pattern_override_wins():
+    """``leaf.<pattern>=`` overrides beat the size rule, first match first,
+    on the checkpoint-manifest ``/``-joined leaf naming."""
+    w = make_wire_format("adaptive:128:small=fp16:large=quant:4:32"
+                         ":leaf.*weight*=identity")
+    tree = {"blk": {"weight": jnp.zeros((8, D_W)), "bias": jnp.zeros((8, D_B))}}
+    got = dict(w.leaf_wires(tree))
+    assert got["blk/weight"] == IdentityWire()      # override, not quant
+    assert got["blk/bias"] == Fp16Wire()            # size rule untouched
+    # overrides are part of identity: distinct spec, distinct object
+    assert w != make_wire_format("adaptive:128:small=fp16:large=quant:4:32")
+
+
+def test_adaptive_encode_decode_roundtrip_mixed_tree():
+    """Tree encode/decode through mixed per-leaf codecs reconstructs to each
+    sub-format's own fidelity: identity-routed leaves exactly, fp16-routed
+    leaves to half precision."""
+    w = make_wire_format("adaptive:128:small=identity:large=fp16")
+    tree = {"bias": jax.random.normal(jax.random.key(0), (8, D_B)),
+            "weight": jax.random.normal(jax.random.key(1), (8, D_W))}
+    treedef, payloads = w.encode_tree(tree, jnp.asarray(0, jnp.int32), 0)
+    out = w.decode_tree(treedef, payloads, tree)
+    np.testing.assert_array_equal(np.asarray(out["bias"]),
+                                  np.asarray(tree["bias"]))
+    np.testing.assert_allclose(np.asarray(out["weight"]),
+                               np.asarray(tree["weight"]), rtol=1e-3)
+    assert float(np.abs(np.asarray(out["weight"] - tree["weight"])).max()) > 0
+
+
+def test_adaptive_bits_per_element_accounting():
+    """Per-shape figures are measured through the routed sub-format; the
+    shapeless figure is the ``large`` route (bulk traffic) for netsim."""
+    w = make_wire_format("adaptive:128:small=fp16:large=quant:4:32")
+    assert w.wire_bits_per_element((8, D_B)) == pytest.approx(16.0)
+    assert w.wire_bits_per_element((8, D_W)) == pytest.approx(
+        QuantWire(bits=4, block=32).wire_bits_per_element((8, D_W)))
+    assert w.wire_bits_per_element() == pytest.approx(
+        QuantWire(bits=4, block=32).wire_bits_per_element())
+
+
+# ------------------------------------------------------- differential tier
+
+_AD_SPEC = "adaptive:128:small=fp16:large=quant:4:32"
+_AD_CASES = [(a, t) for a in ("dcd", "ecd") for t in ("ring", "torus")]
+
+
+@pytest.mark.parametrize("algo,topo", _AD_CASES,
+                         ids=[f"{a}-{t}" for a, t in _AD_CASES])
+def test_adaptive_dist_step_matches_reference(algo, topo):
+    """Acceptance: sharded {dcd, ecd} x {ring, torus} over a pytree of mixed
+    small/large leaves with the adaptive wire == stacked GossipReference
+    (atol 1e-5), with bit-identical wire words eager vs jit (same wire
+    object, same (step, salt, leaf) seeds)."""
+    n = 8
+    plan = make_gossip_plan(topo, n)
+    wire = make_wire_format(_AD_SPEC)
+
+    dist_step = jax.jit(make_dist_train_step(
+        _tree_loss, algo, sgd(), wire, plan, constant(0.05)))
+    dist_state = init_dist_state(algo, _tree_params(), plan, sgd())
+
+    ref = GossipReference(name=algo, plan=plan, wire=wire)
+    ref_step = jax.jit(ref.step_fn())
+    ref_state = ref.init(_tree_params())
+
+    for t in range(3):
+        batch = _tree_batch(jax.random.key(t), n)
+        grads = _grads_for(ref_state.params, batch)
+        ref_state = ref_step(ref_state, grads, jnp.asarray(t), jnp.float32(0.05))
+        dist_state, _ = dist_step(dist_state, batch)
+        for name in ("bias", "weight"):
+            np.testing.assert_allclose(np.asarray(dist_state.params[name]),
+                                       np.asarray(ref_state.params[name]),
+                                       atol=1e-5)
+    # wire words bit for bit, eager vs jit, per mixed payload
+    salt = {"dcd": 2, "ecd": 3}[algo]
+    _, pe = wire.encode_tree(dist_state.params, jnp.asarray(2, jnp.int32), salt)
+    pj = jax.jit(lambda tr, st: wire.encode_tree(tr, st, salt)[1])(
+        dist_state.params, jnp.asarray(2, jnp.int32))
+    for a, b in zip(pe, pj):
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ----------------------------------------------------- checkpoint round-trip
+
+def test_adaptive_state_checkpoint_roundtrip(tmp_path):
+    """A DistState whose plan-keyed aux trees carry mixed per-leaf payload
+    history (fp16 bias / 4-bit weight) round-trips bit-exactly and resumes
+    the exact trajectory — the PCG wire seeding is a pure function of the
+    restored step counter, per leaf."""
+    n = 8
+    plan = make_gossip_plan("ring", n)
+    opt = adamw()
+    step = jax.jit(make_dist_train_step(
+        _tree_loss, "dcd", opt, make_wire_format(_AD_SPEC), plan,
+        constant(0.05)))
+    state = init_dist_state("dcd", _tree_params(), plan, opt)
+    for t in range(3):
+        state, _ = step(state, _tree_batch(jax.random.key(t), n))
+    assert set(state.aux) == {f"rep{s:+d}" for s in plan.shift_list}
+    assert set(state.aux["rep+1"]) == {"bias", "weight"}
+
+    ckpt = str(tmp_path / "ckpt")
+    save(ckpt, 3, state, metadata={"wire": _AD_SPEC})
+    restored, manifest = restore(
+        ckpt, init_dist_state("dcd", _tree_params(), plan, opt), 3)
+    assert manifest["metadata"]["wire"] == _AD_SPEC
+    _assert_state_equal(state, restored)
+
+    batch = _tree_batch(jax.random.key(99), n)
+    cont, _ = step(state, batch)
+    cont_r, _ = step(restored, batch)
+    _assert_state_equal(cont, cont_r)
+
+
+# ------------------------------------------------------ phase-plan control
+
+def test_rekey_resyncs_aux_to_new_plan():
+    """``rekey_dist_state`` at a phase boundary: the aux key set becomes the
+    NEW plan's shift union, every replica is the exact current neighbor
+    params (``roll(X, s)`` — the resync payload round), and params, moments
+    and step counter pass through untouched."""
+    n = 8
+    ring = make_gossip_plan("ring", n)
+    torus = make_gossip_plan("torus", n)
+    opt = adamw()
+    step = jax.jit(make_dist_train_step(
+        _tree_loss, "dcd", opt, make_wire_format("quant:4:32"), ring,
+        constant(0.05)))
+    state = init_dist_state("dcd", _tree_params(), ring, opt)
+    for t in range(2):
+        state, _ = step(state, _tree_batch(jax.random.key(t), n))
+
+    re = rekey_dist_state(state, "dcd", torus)
+    assert set(re.aux) == {f"rep{s:+d}"
+                           for s in as_schedule(torus).shift_union}
+    for s in as_schedule(torus).shift_union:
+        for name in ("bias", "weight"):
+            np.testing.assert_array_equal(
+                np.asarray(re.aux[f"rep{s:+d}"][name]),
+                np.asarray(jnp.roll(state.params[name], s, axis=0)))
+    _assert_state_equal(re.params, state.params)
+    _assert_state_equal(re.opt, state.opt)
+    assert int(re.step) == int(state.step)
+
+
+def test_phase_switch_resume_matches_run_through(tmp_path):
+    """What launch/train.py does on resume, pinned bitwise: running through a
+    phase boundary (quant ring -> adaptive torus) equals checkpointing AT the
+    boundary, restoring into the old phase's shape, and rekeying — rekey is a
+    pure function of params, so the two paths cannot diverge."""
+    n = 8
+    ring, torus = make_gossip_plan("ring", n), make_gossip_plan("torus", n)
+    opt = adamw()
+    step_a = jax.jit(make_dist_train_step(
+        _tree_loss, "dcd", opt, make_wire_format("quant:4:32"), ring,
+        constant(0.05)))
+    step_b = jax.jit(make_dist_train_step(
+        _tree_loss, "dcd", opt, make_wire_format(_AD_SPEC), torus,
+        constant(0.05)))
+
+    state = init_dist_state("dcd", _tree_params(), ring, opt)
+    for t in range(2):
+        state, _ = step_a(state, _tree_batch(jax.random.key(t), n))
+    ckpt = str(tmp_path / "ckpt")
+    save(ckpt, 2, state)
+
+    # path 1: run through the boundary
+    run_through = rekey_dist_state(state, "dcd", torus)
+    # path 2: restore into the OLD phase's shape, then rekey (train.py resume)
+    restored, _ = restore(
+        ckpt, init_dist_state("dcd", _tree_params(), ring, opt), 2)
+    resumed = rekey_dist_state(restored, "dcd", torus)
+    _assert_state_equal(run_through, resumed)
+
+    for t in (2, 3):
+        batch = _tree_batch(jax.random.key(t), n)
+        run_through, _ = step_b(run_through, batch)
+        resumed, _ = step_b(resumed, batch)
+    _assert_state_equal(run_through, resumed)
+
+
+def test_phase_plan_grammar_roundtrip():
+    """``start@topology@wire;...`` parses, normalizes, and round-trips —
+    adaptive sub-specs (which own ``:``/``,``/``=``) ride the grammar
+    unharmed, and phases are sorted + validated."""
+    text = "0@ring@sign;150@full_logn@adaptive:4096:small=fp16:large=quant:4"
+    plan = PhasePlan.parse(text)
+    assert plan.describe() == text
+    assert PhasePlan.parse(plan.describe()) == plan
+    assert plan.phases[1].wire.startswith("adaptive:")
+    # unsorted input normalizes; a plan must start at step 0
+    shuffled = PhasePlan.parse("150@ring@fp16;0@ring@sign")
+    assert [p.start for p in shuffled.phases] == [0, 150]
+    with pytest.raises(AssertionError):
+        PhasePlan.parse("10@ring@sign")
+    with pytest.raises(AssertionError):
+        PhasePlan.parse("0@ring@sign;0@ring@fp16")    # duplicate boundary
+
+
+def test_phase_plan_lookup_and_segments():
+    """step->phase lookup is exact at boundaries and ``segments`` tiles the
+    horizon without gaps or overlap."""
+    plan = PhasePlan((Phase(0, "ring", "sign"),
+                      Phase(100, "exp", "quant:3"),
+                      Phase(200, "full_logn", "fp16")))
+    assert plan.phase_at(0).wire == "sign"
+    assert plan.phase_at(99).wire == "sign"
+    assert plan.phase_at(100).wire == "quant:3"
+    assert plan.phase_at(500).wire == "fp16"
+    segs = plan.segments(250)
+    assert [(a, b) for a, b, _ in segs] == [(0, 100), (100, 200), (200, 250)]
+    assert [p.topology for _, _, p in segs] == ["ring", "exp", "full_logn"]
+    # horizon shorter than a later phase: that phase simply never runs
+    assert [(a, b) for a, b, _ in plan.segments(150)] == [(0, 100), (100, 150)]

@@ -1,0 +1,57 @@
+"""Docs link check: every relative markdown link in README.md and docs/*.md
+resolves — target file exists, and a ``#fragment`` matches a real heading
+anchor (GitHub slug rules) in the target.  Pure stdlib, so the CI docs job
+can run it without the jax stack; it also rides the tier-1 suite."""
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+PAGES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+_LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub's heading-anchor slug: lowercase, drop punctuation, spaces to
+    hyphens (hyphens/underscores survive)."""
+    text = heading.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: pathlib.Path) -> set:
+    return {_slug(h) for h in _HEADING.findall(path.read_text())}
+
+
+def _links(path: pathlib.Path):
+    for m in _LINK.finditer(path.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        yield target
+
+
+def test_docs_pages_exist():
+    """The reference manual has its four pages and the README indexes them."""
+    names = {p.name for p in PAGES}
+    assert {"README.md", "wire-formats.md", "topologies.md",
+            "algorithms.md", "failures.md"} <= names
+    readme = (ROOT / "README.md").read_text()
+    for page in ("wire-formats", "topologies", "algorithms", "failures"):
+        assert f"docs/{page}.md" in readme, f"README does not link docs/{page}.md"
+
+
+@pytest.mark.parametrize("page", PAGES, ids=[p.name for p in PAGES])
+def test_relative_links_resolve(page):
+    for target in _links(page):
+        path_part, _, fragment = target.partition("#")
+        dest = page if not path_part else (page.parent / path_part).resolve()
+        assert dest.exists(), f"{page.name}: broken link target {target!r}"
+        if fragment:
+            assert dest.suffix == ".md", \
+                f"{page.name}: fragment on non-markdown target {target!r}"
+            assert fragment in _anchors(dest), \
+                f"{page.name}: anchor #{fragment} not found in {dest.name}"
