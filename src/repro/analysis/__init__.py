@@ -1,0 +1,15 @@
+"""Static-analysis subsystem: machine-checked repo contracts.
+
+Two layers:
+
+- ``repro.analysis.staticcheck`` — a stdlib-only AST lint engine (no jax
+  import) with an ``RL###`` rule registry covering syntax/undefined-name
+  basics plus the repo-specific determinism and wire-honesty contracts.
+- ``repro.analysis.jaxpr_checks`` — a programmatic analyzer over the
+  jaxprs/HLO of compiled distributed train steps (imports jax).
+
+Entry point: ``python -m repro.analysis.lint [--jaxpr]``.
+
+This module deliberately imports nothing, so ``import repro.analysis.lint``
+stays jax-free for the CI staticcheck job.
+"""

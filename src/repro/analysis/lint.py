@@ -1,0 +1,81 @@
+"""CLI gate: ``python -m repro.analysis.lint [--jaxpr]``.
+
+Default run is stdlib-only (no jax import): every ``RL###`` rule over the
+tree, exit 1 on any finding.  ``--jaxpr`` additionally compiles the
+representative (algo x topology x wire x drop) grid on a forced-host
+device mesh and runs the jaxpr/HLO invariant analyzer over each case —
+the machine-checked version of the wire-honesty story in docs/.
+
+Keep this module importable without jax: ``jaxpr_checks`` is imported
+lazily, after XLA_FLAGS is set up for the forced device count.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import sys
+
+
+def _default_root() -> pathlib.Path:
+    # src/repro/analysis/lint.py -> repo root is three levels above src/.
+    here = pathlib.Path(__file__).resolve()
+    root = here.parents[3]
+    if (root / "src" / "repro").is_dir():
+        return root
+    return pathlib.Path.cwd()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="stdlib AST lint + optional jaxpr/HLO invariant sweep")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="also compile the representative config grid and "
+                         "run the jaxpr/HLO analyzer (imports jax)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.staticcheck import RULES, lint_tree
+
+    if args.list_rules:
+        for r in sorted(RULES.values(), key=lambda r: r.id):
+            scope = r.scope if not r.paths else f"{r.scope} {'/'.join(r.paths)}"
+            print(f"{r.id}  [{scope}]  {r.title}")
+        return 0
+
+    root = pathlib.Path(args.root) if args.root else _default_root()
+    findings = lint_tree(root)
+    for f in findings:
+        print(f)
+    failed = bool(findings)
+    print(f"staticcheck: {len(findings)} finding(s) over {root}")
+
+    if args.jaxpr:
+        # XLA_FLAGS must be in place before anything imports jax.
+        n = int(os.environ.get("REPRO_ANALYSIS_DEVICES", "8"))
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = \
+                f"--xla_force_host_platform_device_count={n} {flags}".strip()
+        from repro.analysis import jaxpr_checks
+
+        reports = jaxpr_checks.run_sweep(require_hlo=True)
+        bad = 0
+        for rep in reports:
+            status = "ok" if rep.ok else "FAIL"
+            print(f"jaxpr[{status}] {rep.describe()}")
+            for v in rep.violations:
+                print(f"  - {v}")
+            bad += not rep.ok
+        print(f"jaxpr sweep: {len(reports)} case(s), {bad} failing")
+        failed = failed or bad > 0
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

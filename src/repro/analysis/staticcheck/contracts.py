@@ -1,0 +1,330 @@
+"""Repo-specific contract rules: determinism, wire salts, kernel-primitive
+confinement, and wire-registry completeness.
+
+These encode the contracts documented in ``docs/`` (seeding, wire honesty)
+as blocking checks.  File rules here are scoped to ``src/`` — tests and
+examples may legitimately use ad-hoc RNG.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Iterator, List
+
+from repro.analysis.staticcheck import Finding, rule
+
+# ---------------------------------------------------------------------------
+# RL010 — unseeded numpy RNG under src/
+# ---------------------------------------------------------------------------
+
+# Constructors that are fine *when given an explicit seed argument*.
+_RNG_CTORS = frozenset({
+    "default_rng", "RandomState", "SeedSequence", "Philox", "PCG64",
+    "SFC64", "Generator",
+})
+# Module-level numpy global-state RNG: never acceptable in src/ — it is
+# unseeded process state, invisible to the (step, salt, leaf) contract.
+_GLOBAL_RNG_FNS = frozenset({
+    "seed", "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "bytes", "normal", "uniform", "choice", "shuffle",
+    "permutation", "standard_normal", "binomial", "poisson", "beta",
+    "gamma", "exponential", "laplace", "get_state", "set_state",
+})
+
+
+def _np_random_attr(func: ast.AST):
+    """Return the attribute name X for ``np.random.X`` / ``numpy.random.X``."""
+    if (isinstance(func, ast.Attribute)
+            and isinstance(func.value, ast.Attribute)
+            and func.value.attr == "random"
+            and isinstance(func.value.value, ast.Name)
+            and func.value.value.id in ("np", "numpy")):
+        return func.attr
+    return None
+
+
+def _numpy_random_imports(tree: ast.AST) -> set:
+    """Names imported directly from ``numpy.random``."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and \
+                node.module.startswith("numpy.random"):
+            for alias in node.names:
+                names.add(alias.asname or alias.name)
+    return names
+
+
+@rule("RL010", "unseeded numpy RNG under src/", paths=("src/",))
+def unseeded_numpy_rng(rel_path: str, tree: ast.AST,
+                       source: str) -> Iterator[Finding]:
+    direct = _numpy_random_imports(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        attr = _np_random_attr(node.func)
+        if attr is None and isinstance(node.func, ast.Name) and \
+                node.func.id in direct:
+            attr = node.func.id
+        if attr is None:
+            continue
+        if attr in _GLOBAL_RNG_FNS:
+            yield Finding(rel_path, node.lineno, "RL010",
+                          f"numpy global-state RNG np.random.{attr}() — use "
+                          "an explicitly seeded Generator")
+        elif attr in _RNG_CTORS and not node.args and not node.keywords:
+            yield Finding(rel_path, node.lineno, "RL010",
+                          f"np.random.{attr}() without a seed draws from OS "
+                          "entropy — pass an explicit seed")
+
+
+# ---------------------------------------------------------------------------
+# RL011 — time/entropy-derived seeds under src/
+# ---------------------------------------------------------------------------
+
+_SEED_SINKS = frozenset({
+    "key", "PRNGKey", "seed", "default_rng", "RandomState",
+    "SeedSequence", "fold_in",
+})
+_ENTROPY_FNS = frozenset({
+    "time", "time_ns", "monotonic", "monotonic_ns", "perf_counter",
+    "perf_counter_ns", "urandom", "uuid1", "uuid4", "getrandbits",
+    "token_bytes", "token_hex", "randbytes",
+})
+
+
+def _call_name(func: ast.AST):
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+@rule("RL011", "time/entropy-derived seed under src/", paths=("src/",))
+def time_derived_seed(rel_path: str, tree: ast.AST,
+                      source: str) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _call_name(node.func) in _SEED_SINKS):
+            continue
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        for arg in args:
+            for sub in ast.walk(arg):
+                if isinstance(sub, ast.Call) and \
+                        _call_name(sub.func) in _ENTROPY_FNS:
+                    yield Finding(
+                        rel_path, node.lineno, "RL011",
+                        f"seed derived from {_call_name(sub.func)}() — "
+                        "seeds must be deterministic (step, salt, leaf)")
+
+
+# ---------------------------------------------------------------------------
+# RL021 — shard_map/ppermute/pallas confinement
+# ---------------------------------------------------------------------------
+
+_CONFINED_NAMES = frozenset({"shard_map", "ppermute", "pallas_call"})
+_CONFINED_MODULES = ("shard_map", "pallas")
+_ALLOWED_PREFIXES = ("src/repro/distributed/", "src/repro/kernels/")
+
+
+@rule("RL021",
+      "shard_map/ppermute/pallas confined to distributed/ and kernels/",
+      paths=("src/",))
+def confined_primitives(rel_path: str, tree: ast.AST,
+                        source: str) -> Iterator[Finding]:
+    if rel_path.startswith(_ALLOWED_PREFIXES):
+        return
+    seen = set()
+
+    def hit(node, symbol):
+        if (node.lineno, symbol) not in seen:
+            seen.add((node.lineno, symbol))
+            yield Finding(rel_path, node.lineno, "RL021",
+                          f"use of {symbol} outside distributed/ and "
+                          "kernels/ — collective/kernel primitives are "
+                          "confined so wire honesty stays auditable")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if any(m in mod for m in _CONFINED_MODULES):
+                yield from hit(node, mod)
+            for alias in node.names:
+                if alias.name in _CONFINED_NAMES | {"pallas"}:
+                    yield from hit(node, alias.name)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if any(m in alias.name for m in _CONFINED_MODULES):
+                    yield from hit(node, alias.name)
+        elif isinstance(node, ast.Attribute) and \
+                node.attr in _CONFINED_NAMES:
+            yield from hit(node, node.attr)
+        elif isinstance(node, ast.Name) and node.id in _CONFINED_NAMES and \
+                isinstance(node.ctx, ast.Load):
+            yield from hit(node, node.id)
+
+
+# ---------------------------------------------------------------------------
+# RL020 — wire-salt uniqueness and reference/runtime consistency (tree)
+# ---------------------------------------------------------------------------
+
+_SALTS_FILE = "src/repro/core/algorithms.py"
+_ROUNDS_FILE = "src/repro/distributed/decentralized.py"
+_ROUND_FN = re.compile(r"^_(\w+)_round$")
+
+
+def _parse_wire_salts(tree: ast.AST):
+    """The ``_WIRE_SALTS = {family: salt}`` literal, or None if absent."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "_WIRE_SALTS" and \
+                        isinstance(node.value, ast.Dict):
+                    out = {}
+                    for k, v in zip(node.value.keys, node.value.values):
+                        if isinstance(k, ast.Constant) and \
+                                isinstance(v, ast.Constant):
+                            out[k.value] = (v.value, node.lineno)
+                    return out
+    return None
+
+
+def _round_fn_salts(tree: ast.AST):
+    """{family: [(salt, line), ...]} from encode_tree(..., salt=N) calls
+    inside each ``_<family>_round`` function."""
+    out = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        m = _ROUND_FN.match(node.name)
+        if not m:
+            continue
+        family = m.group(1)
+        for sub in ast.walk(node):
+            if not (isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr == "encode_tree"):
+                continue
+            salt = None
+            for kw in sub.keywords:
+                if kw.arg == "salt" and isinstance(kw.value, ast.Constant):
+                    salt = kw.value.value
+            if salt is None and len(sub.args) >= 3 and \
+                    isinstance(sub.args[2], ast.Constant):
+                salt = sub.args[2].value
+            if salt is not None:
+                out.setdefault(family, []).append((salt, sub.lineno))
+    return out
+
+
+@rule("RL020", "wire-salt uniqueness across algo families", scope="tree")
+def wire_salt_uniqueness(root: pathlib.Path) -> Iterator[Finding]:
+    salts_path = root / _SALTS_FILE
+    rounds_path = root / _ROUNDS_FILE
+    if not salts_path.is_file() or not rounds_path.is_file():
+        missing = _SALTS_FILE if not salts_path.is_file() else _ROUNDS_FILE
+        yield Finding(missing, 1, "RL020",
+                      "wire-salt contract file missing — if the salt table "
+                      "moved, update repro.analysis.staticcheck.contracts")
+        return
+    ref = _parse_wire_salts(ast.parse(salts_path.read_text()))
+    if ref is None:
+        yield Finding(_SALTS_FILE, 1, "RL020",
+                      "_WIRE_SALTS dict literal not found")
+        return
+    by_salt = {}
+    for family, (salt, line) in sorted(ref.items()):
+        if salt in by_salt:
+            yield Finding(_SALTS_FILE, line, "RL020",
+                          f"salt collision: families {by_salt[salt]!r} and "
+                          f"{family!r} share wire salt {salt}")
+        by_salt.setdefault(salt, family)
+    runtime = _round_fn_salts(ast.parse(rounds_path.read_text()))
+    rt_by_salt = {}
+    for family, pairs in sorted(runtime.items()):
+        distinct = sorted({s for s, _ in pairs})
+        if len(distinct) > 1:
+            yield Finding(_ROUNDS_FILE, pairs[0][1], "RL020",
+                          f"_{family}_round encodes with multiple salts "
+                          f"{distinct}")
+            continue
+        salt, line = pairs[0]
+        if salt in rt_by_salt and rt_by_salt[salt] != family:
+            yield Finding(_ROUNDS_FILE, line, "RL020",
+                          f"salt collision: _{rt_by_salt[salt]}_round and "
+                          f"_{family}_round both encode with salt {salt}")
+        rt_by_salt.setdefault(salt, family)
+        if family in ref and ref[family][0] != salt:
+            yield Finding(_ROUNDS_FILE, line, "RL020",
+                          f"_{family}_round encodes with salt {salt} but "
+                          f"_WIRE_SALTS[{family!r}] == {ref[family][0]} — "
+                          "reference and runtime would diverge")
+
+
+# ---------------------------------------------------------------------------
+# RL022 — registered WireFormat completeness (tree)
+# ---------------------------------------------------------------------------
+
+_WIRE_FILE = "src/repro/distributed/wire.py"
+_WIRE_DOC = "docs/wire-formats.md"
+
+
+def _registrations(tree: ast.AST):
+    """[(name, ctor_class_name, line)] from register_wire_format calls."""
+    regs = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "register_wire_format"
+                and len(node.args) >= 2
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[1], ast.Name)):
+            regs.append((node.args[0].value, node.args[1].id, node.lineno))
+    return regs
+
+
+def _wire_spec_isinstance_classes(tree: ast.AST):
+    """Class names appearing in isinstance() checks inside wire_spec()."""
+    classes = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "wire_spec":
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Name)
+                        and sub.func.id == "isinstance"
+                        and len(sub.args) == 2):
+                    second = sub.args[1]
+                    elts = second.elts if isinstance(second, ast.Tuple) \
+                        else [second]
+                    classes.update(e.id for e in elts
+                                   if isinstance(e, ast.Name))
+    return classes
+
+
+@rule("RL022", "registered WireFormat completeness", scope="tree")
+def wire_registry_completeness(root: pathlib.Path) -> Iterator[Finding]:
+    wire_path = root / _WIRE_FILE
+    if not wire_path.is_file():
+        yield Finding(_WIRE_FILE, 1, "RL022",
+                      "wire registry file missing — if the registry moved, "
+                      "update repro.analysis.staticcheck.contracts")
+        return
+    tree = ast.parse(wire_path.read_text())
+    regs = _registrations(tree)
+    if not regs:
+        yield Finding(_WIRE_FILE, 1, "RL022",
+                      "no register_wire_format() calls found")
+        return
+    covered = _wire_spec_isinstance_classes(tree)
+    doc_path = root / _WIRE_DOC
+    doc_text = doc_path.read_text() if doc_path.is_file() else ""
+    for name, ctor, line in regs:
+        if ctor not in covered:
+            yield Finding(_WIRE_FILE, line, "RL022",
+                          f"registered wire format {name!r} ({ctor}) has no "
+                          "isinstance branch in wire_spec() — specs would "
+                          "not round-trip")
+        if f"`{name}" not in doc_text:
+            yield Finding(_WIRE_FILE, line, "RL022",
+                          f"registered wire format {name!r} has no anchor "
+                          f"in {_WIRE_DOC}")

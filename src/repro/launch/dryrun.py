@@ -245,12 +245,17 @@ def _train_record(arch, shape_name, shape, algo, wire, codec, gossip, multi_pod,
             "wire_format": codec.wire_format,
             "wire_spec_per_leaf": _wire_spec_per_leaf(codec, state_sds.params),
         }
+    from repro.analysis.jaxpr_checks import analysis_record
+
     return {
         "arch": arch, "shape": shape_name, "kind": "train", "algo": algo,
         "wire": wire, **_gossip_record(gossip, algo),
         "multi_pod": multi_pod,
         "n_nodes": n, "n_chips": n_chips,
         "params_total": n_total, **wire_rec,
+        # invariant summary (permute payload dtypes, f64/callback freedom) —
+        # a record, not a gate: multi-axis meshes legitimately reshard f32
+        "analysis": analysis_record(compiled),
         "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
         "memory": {
             "argument_bytes": mem.argument_size_in_bytes,
@@ -386,11 +391,14 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
         batch = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), batch_sds)
         for _ in range(steps):
             state, metrics = compiled(state, batch)
+    from repro.analysis.jaxpr_checks import analysis_record
+
     rec = {
         "arch": arch, "kind": "smoke", "algo": algo, "wire": wire,
         **_gossip_record(gossip, algo),
         "n_devices": int(devs.size), "compile_s": round(t1 - t0, 1),
         "steps": steps, "loss": float(metrics["loss"]),
+        "analysis": analysis_record(compiled),
     }
     rec.update(_failure_record(codec, gossip, algo, p_sds, drop, straggler))
     rec.update(_controller_record(codec, gossip, algo, p_sds, drop, straggler))

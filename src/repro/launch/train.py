@@ -40,6 +40,7 @@ from repro.distributed.decentralized import (
     make_dist_train_step,
     rekey_dist_state,
 )
+from repro.analysis.jaxpr_checks import jit_compile_count
 from repro.distributed.failures import make_drop_spec
 from repro.distributed.gossip import make_gossip_plan
 from repro.distributed.wire import make_wire_format
@@ -115,12 +116,13 @@ def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
     dc = DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len, global_batch=tc.global_batch,
                     n_shards=tc.n_nodes, seed=tc.seed)
     hist = {"step": [], "loss": [], "consensus": [],
-            "phases": pplan.records()}
+            "phases": pplan.records(), "compiles_per_segment": []}
     t0 = time.time()
     for seg_start, seg_stop, phase in segments:
         if seg_stop <= start:
             continue
         plan, step_fn = build_phase(phase)
+        ran_steps = 0
         if seg_start > 0 and seg_start >= start:
             # phase boundary: resync aux to the new plan/wire (pure function
             # of params, so resume-at-boundary == run-through-boundary)
@@ -130,6 +132,7 @@ def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
         for t in range(max(seg_start, start), seg_stop):
             batch = stacked_node_batches(dc, t, cfg)
             state, metrics = step_fn(state, batch)
+            ran_steps += 1
             if (t + 1) % tc.log_every == 0 or t == tc.steps - 1:
                 hist["step"].append(t + 1)
                 hist["loss"].append(float(metrics["loss"]))
@@ -139,6 +142,18 @@ def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
                       flush=True)
             if tc.ckpt_dir and (t + 1) % tc.ckpt_every == 0:
                 save(tc.ckpt_dir, t + 1, state, metadata={"loss": float(metrics["loss"])})
+        if ran_steps:
+            # retrace guard: the segment's freshly-jitted step must have
+            # compiled exactly once — a higher count means every step paid a
+            # silent retrace (shape/dtype/weak-type drift at the boundary)
+            n_compiles = jit_compile_count(step_fn)
+            if n_compiles != 1:
+                raise RuntimeError(
+                    f"retrace guard: phase segment [{seg_start}, {seg_stop}) "
+                    f"compiled {n_compiles}x over {ran_steps} steps (expected "
+                    "exactly 1) — step inputs must be shape/dtype-stable "
+                    "within a segment")
+            hist["compiles_per_segment"].append(n_compiles)
     hist["wall_s"] = time.time() - t0
     hist["final_loss"] = hist["loss"][-1]
     return hist

@@ -187,6 +187,27 @@ def test_adaptive_bits_per_element_accounting():
         QuantWire(bits=4, block=32).wire_bits_per_element())
 
 
+def test_adaptive_analyzer_kernel_accounting():
+    """The analyzer's structural contract at the jaxpr level: with the mixed
+    small/large tree, every decode site pays exactly ONE fused dequant kernel
+    (the quant:4 bulk route) while the fp16 small route stays kernel-free —
+    so total calls == decode_sites x 1, exactly what ``analyze_case``
+    predicts from tracing the wire itself."""
+    from repro.analysis import jaxpr_checks as jc
+
+    spec = "adaptive:128:small=fp16:large=quant:4"
+    plan = make_gossip_plan("torus", 8)
+    stacked = jax.tree.map(lambda l: jnp.broadcast_to(l, (8,) + l.shape),
+                           _tree_params())
+    assert jc.kernels_per_site(spec, stacked) == 1
+    assert jc.decode_sites("dcd", plan) == 1 + len(as_schedule(plan).shift_union)
+
+    rep = jc.analyze_case("dcd", "torus", spec, hlo=False)
+    assert rep.ok, rep.violations
+    assert rep.kernel_calls == rep.expected_kernels == \
+        jc.decode_sites("dcd", plan) > 0
+
+
 # ------------------------------------------------------- differential tier
 
 _AD_SPEC = "adaptive:128:small=fp16:large=quant:4:32"

@@ -1,0 +1,208 @@
+"""repro.analysis.jaxpr_checks — the jax-side invariant analyzer.
+
+Unit tier for the machinery the slow subprocess sweeps
+(tests/test_distributed.py) drive end to end: the HLO permute-operand
+parser (including consumer-line exclusion, the bug class that motivated
+it), the wire-registry spec round-trip the RL022 static rule assumes, the
+decode-site/kernels-per-site accounting, a jaxpr-level ``analyze_case``,
+and the ``jit_compile_count`` retrace guard used by launch/train.py.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import jaxpr_checks as jc
+from repro.distributed.gossip import make_gossip_plan
+from repro.distributed.wire import (
+    WIRE_FORMATS,
+    Fp16Wire,
+    IdentityWire,
+    QuantWire,
+    SignWire,
+    SparseWire,
+    make_wire_format,
+    wire_spec,
+)
+
+N = 8
+
+
+def _stacked():
+    return {"bias": jnp.zeros((N, 32)), "weight": jnp.zeros((N, 1024))}
+
+
+# ---------------------------------------------------------------------------
+# WireFormat registry round-trip: wire_spec is the inverse of make_wire_format
+# ---------------------------------------------------------------------------
+
+REGISTRY_VARIANTS = [
+    QuantWire(bits=4, block=128),
+    QuantWire(bits=8, block=64),
+    QuantWire(bits=3, block=1024, pack=True),
+    SparseWire(p=0.25, mode="randk", block=128),
+    SparseWire(p=0.1, mode="topk", block=256),
+    SignWire(block=128, scale="mean"),
+    SignWire(block=1024, scale="l2"),
+    Fp16Wire(),
+    IdentityWire(),
+    make_wire_format("adaptive:128:small=fp16:large=quant:4"),
+    make_wire_format("adaptive:4096:small=identity:large=sign:mean:128"),
+    make_wire_format(
+        "adaptive:128:small=fp16:large=quant:4:leaf.emb*=sparse:0.25"),
+]
+
+
+@pytest.mark.parametrize("w", REGISTRY_VARIANTS,
+                         ids=[wire_spec(w) for w in REGISTRY_VARIANTS])
+def test_wire_spec_roundtrips_through_make_wire_format(w):
+    assert make_wire_format(wire_spec(w)) == w
+
+
+def test_registry_variants_cover_every_registered_format():
+    """Registering a new wire format must extend the round-trip table —
+    the same completeness bar RL022 enforces for wire_spec branches."""
+    covered = {wire_spec(w).split(":")[0] for w in REGISTRY_VARIANTS}
+    assert covered == set(WIRE_FORMATS)
+
+
+# ---------------------------------------------------------------------------
+# HLO permute-operand parser
+# ---------------------------------------------------------------------------
+
+_SYNTH_HLO = """\
+  %p0 = u32[1,3,2] parameter(0)
+  %collective-permute.1 = u32[1,3,2] collective-permute(u32[1,3,2] %p0), source_target_pairs={{0,1}}
+  %bitcast.3 = f32[1,1024] bitcast(f32[1,1024] %collective-permute.1)
+  %collective-permute-start.2 = (f16[4], f16[4]) collective-permute-start(f16[4] %y)
+  %add.9 = f32[1,1024] add(f32[1,1024] %bitcast.3, f32[1,1024] %z)
+"""
+
+
+def test_permute_operands_parses_instruction_lines_only():
+    ops = jc.permute_operands(_SYNTH_HLO)
+    dtypes = {o.dtype for o in ops}
+    # the f32 bitcast/add lines merely *consume* the permuted value — their
+    # types are not what moved on the wire and must not be reported
+    assert dtypes == {"u32", "f16"}
+    assert jc.PermuteOperand("u32", (1, 3, 2)) in ops
+
+
+def test_permute_operands_empty_on_permute_free_hlo():
+    assert jc.permute_operands("%add.1 = f32[8] add(f32[8] %a, f32[8] %b)") == []
+
+
+# ---------------------------------------------------------------------------
+# payload whitelist on synthetic HLO
+# ---------------------------------------------------------------------------
+
+def test_whitelist_flags_dense_param_leak():
+    # per-chip dense weight leaf (1024/... with leading axis sharded 8-ways)
+    hlo = ("%collective-permute.1 = f32[1,1024] collective-permute("
+           "f32[1,1024] %x)\n"
+           "%collective-permute.2 = f16[1,1024] collective-permute("
+           "f16[1,1024] %y)\n"
+           "%collective-permute.3 = f16[1,32] collective-permute("
+           "f16[1,32] %z)\n")
+    wire = Fp16Wire()
+    v = jc.check_permute_payload_whitelist(hlo, wire, _stacked(), n_devices=N)
+    assert any("wire compression is bypassed" in m for m in v), v
+    # allow_dense (the documented deepsqueeze exemption) keeps only the
+    # container-presence checks
+    assert jc.check_permute_payload_whitelist(
+        hlo, wire, _stacked(), n_devices=N, allow_dense=True) == []
+
+
+def test_whitelist_clean_when_only_containers_move():
+    hlo = ("%collective-permute.1 = f16[1,1024] collective-permute("
+           "f16[1,1024] %y)\n"
+           "%collective-permute.2 = f16[1,32] collective-permute("
+           "f16[1,32] %z)\n")
+    assert jc.check_permute_payload_whitelist(
+        hlo, Fp16Wire(), _stacked(), n_devices=N) == []
+
+
+def test_whitelist_requires_container_dtype_on_wire():
+    hlo = ("%collective-permute.1 = f32[1,8] collective-permute("
+           "f32[1,8] %s)\n")
+    wire = QuantWire(bits=4, block=128)
+    v = jc.check_permute_payload_whitelist(hlo, wire, _stacked(), n_devices=N)
+    assert any("never rides a collective-permute" in m for m in v), v
+
+
+def test_payload_dtype_shapes_measures_the_wire():
+    dtypes = {d for d, _ in jc.payload_dtype_shapes(
+        QuantWire(bits=4, block=128), _stacked())}
+    assert dtypes == {"u32", "f32"}   # packed words + per-block scales
+
+
+# ---------------------------------------------------------------------------
+# decode-site / kernels-per-site accounting
+# ---------------------------------------------------------------------------
+
+def test_decode_sites_formulas():
+    ring = make_gossip_plan("ring", N)
+    assert jc.decode_sites("dcd", ring) == 3       # self + 2 neighbors
+    assert jc.decode_sites("choco", ring) == 3
+    logn = make_gossip_plan("full_logn", N)
+    assert jc.decode_sites("dcd", logn) == \
+        logn.period * (1 + len(logn.shift_union)) == 12
+    assert jc.decode_sites("deepsqueeze", ring) == 4   # err + X_eff + 2 nbrs
+    assert jc.decode_sites("dpsgd", ring) == 0
+
+
+def test_kernels_per_site_traces_the_wire():
+    tree = _stacked()
+    # packed 4-bit: one fused unpack_dequant kernel for the eligible leaf
+    assert jc.kernels_per_site("quant:4", tree) == 1
+    # unpacked 8-bit and fp16 have no packed words — jnp reference path
+    assert jc.kernels_per_site("quant:8", tree) == 0
+    assert jc.kernels_per_site("fp16", tree) == 0
+    assert jc.kernels_per_site("sign", tree) == 1
+    # a tree with no kernel-eligible leaf never reaches a kernel
+    small = {"b": jnp.zeros((N, 32))}
+    assert jc.kernels_per_site("quant:4", small) == 0
+
+
+def test_expected_kernel_calls_composes():
+    ring = make_gossip_plan("ring", N)
+    tree = _stacked()
+    assert jc.expected_kernel_calls("dcd", ring, None, tree) == 0
+    assert jc.expected_kernel_calls(
+        "dcd", ring, QuantWire(bits=4, block=128), tree) == 3
+    assert jc.expected_kernel_calls(
+        "deepsqueeze", ring, SignWire(block=128), tree) == 4
+
+
+# ---------------------------------------------------------------------------
+# analyze_case at the jaxpr level (no mesh needed — fast)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,topo,wire", [
+    ("choco", "ring", "sign"),
+    ("dcd", "full_logn", "quant:4"),
+])
+def test_analyze_case_jaxpr_level(algo, topo, wire):
+    rep = jc.analyze_case(algo, topo, wire, hlo=False)
+    assert rep.ok, rep.violations
+    assert rep.kernel_calls == rep.expected_kernels > 0
+    assert rep.permute_dtypes == ()   # HLO checks skipped without a mesh
+    assert wire in rep.describe()
+
+
+def test_analyze_case_reports_f64_and_kernel_mismatch_shapes():
+    rep = jc.analyze_case("dpsgd", "ring", None, hlo=False)
+    assert rep.ok and rep.kernel_calls == 0
+
+
+# ---------------------------------------------------------------------------
+# retrace guard
+# ---------------------------------------------------------------------------
+
+def test_jit_compile_count():
+    f = jax.jit(lambda x: x * 2)
+    assert jc.jit_compile_count(f) == 0
+    f(jnp.zeros((4,)))
+    f(jnp.ones((4,)))          # same shape/dtype: cache hit
+    assert jc.jit_compile_count(f) == 1
+    f(jnp.zeros((8,)))         # new shape: retrace
+    assert jc.jit_compile_count(f) == 2

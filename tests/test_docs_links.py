@@ -38,9 +38,10 @@ def test_docs_pages_exist():
     """The reference manual has its four pages and the README indexes them."""
     names = {p.name for p in PAGES}
     assert {"README.md", "wire-formats.md", "topologies.md",
-            "algorithms.md", "failures.md"} <= names
+            "algorithms.md", "failures.md", "static-analysis.md"} <= names
     readme = (ROOT / "README.md").read_text()
-    for page in ("wire-formats", "topologies", "algorithms", "failures"):
+    for page in ("wire-formats", "topologies", "algorithms", "failures",
+                 "static-analysis"):
         assert f"docs/{page}.md" in readme, f"README does not link docs/{page}.md"
 
 
