@@ -38,11 +38,12 @@ from repro.distributed.wire import IdentityWire, make_wire_format
 from repro.optim import sgd
 from repro.optim.schedules import constant
 
-# The three fused Pallas decode kernels; jaxpr text carries their names.
+# The fused Pallas decode kernels; jaxpr text carries their names.
 DECODE_KERNELS = (
     "_unpack_dequant_axpy_kernel",
     "_sparse_scatter_axpy_kernel",
     "_unpack_sign_axpy_kernel",
+    "_lowrank_axpy_kernel",
 )
 
 _CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
@@ -137,8 +138,7 @@ def _shape_variants(shape: Tuple[int, ...], n_devices: Optional[int]) -> set:
 
 
 def check_permute_payload_whitelist(hlo_text: str, wire, stacked_params,
-                                    n_devices: Optional[int] = None,
-                                    allow_dense: bool = False) -> List[str]:
+                                    n_devices: Optional[int] = None) -> List[str]:
     """The acceptance contract: permute operands are wire containers only.
 
     - every non-f32 payload container dtype must actually appear on a
@@ -163,8 +163,6 @@ def check_permute_payload_whitelist(hlo_text: str, wire, stacked_params,
             violations.append(
                 f"wire container dtype {d} never rides a collective-permute "
                 f"(saw {sorted(seen)})")
-    if allow_dense:
-        return violations
     dense = set()
     for s in dense_leaf_shapes(stacked_params):
         dense |= _shape_variants(s, n_devices)
@@ -188,10 +186,11 @@ def decode_sites(algo: str, sched) -> int:
     Per gossip round the replica-tracking algorithms (dcd/ecd/choco)
     decode 1 self payload + one payload per union shift; the replica share
     per step is ``period * |union| == sched.replica_payloads`` for
-    per-step schedules.  DeepSqueeze decodes its own residual-compensated
-    payload twice (err update + X_eff) plus one per neighbor.  Time-varying
-    schedules lower through lax.switch, so the *trace* still contains every
-    round's sites even though one executes per step.
+    per-step schedules.  DeepSqueeze (stateless receive) decodes its own
+    error-compensated model payload twice (residual update + the D_self
+    displacement term) plus one per neighbor shift of the round.
+    Time-varying schedules lower through lax.switch, so the *trace* still
+    contains every round's sites even though one executes per step.
     """
     sched = as_schedule(sched)
     if algo in ("dcd", "ecd", "choco"):
@@ -225,14 +224,18 @@ def expected_kernel_calls(algo: str, sched, wire, stacked_tree) -> int:
 # case runner: build a dist step, trace, (optionally) compile, check
 # ---------------------------------------------------------------------------
 
-# Two-leaf testbed: a small leaf under the adaptive threshold (rides fp16)
-# and a kernel-eligible bulk leaf.
-_D_SMALL, _D_LARGE = 32, 1024
+# Three-leaf testbed: a small leaf under the adaptive threshold (rides fp16),
+# a kernel-eligible bulk leaf, and a matrix leaf so the structure-exploiting
+# lowrank format has a 2-D payload to factor (128 columns keeps the fused
+# axpy kernel's lane gate open).
+_D_SMALL, _D_LARGE, _D_COLS = 32, 1024, 128
 _ADAPTIVE_SPEC = "adaptive:128:small=fp16:large=quant:4"
 
 
 def _toy_params():
-    return {"bias": jnp.zeros((_D_SMALL,)), "weight": jnp.zeros((_D_LARGE,))}
+    return {"bias": jnp.zeros((_D_SMALL,)),
+            "weight": jnp.zeros((_D_LARGE,)),
+            "proj": jnp.zeros((_D_SMALL, _D_COLS))}
 
 
 def _toy_batch(n: int, m: int = 4):
@@ -242,7 +245,8 @@ def _toy_batch(n: int, m: int = 4):
 
 
 def _toy_loss(params, batch):
-    pred = batch["Ab"] @ params["bias"] + batch["Aw"] @ params["weight"]
+    pred = batch["Ab"] @ params["bias"] + batch["Aw"] @ params["weight"] \
+        + jnp.mean(batch["Ab"] @ params["proj"], axis=-1)
     loss = 0.5 * jnp.mean((pred - batch["b"]) ** 2)
     return loss, {"xent": loss}
 
@@ -280,7 +284,7 @@ def analyze_case(algo: str, topology: str, wire_spec: Optional[str],
         _toy_loss, algo, sgd(), wire, sched, constant(0.05),
         mesh=mesh, drop=drop or None)
     state = init_dist_state(algo, _toy_params(), sched, sgd(),
-                            drop=drop or None)
+                            drop=drop or None, wire=wire)
     batch = _toy_batch(n)
 
     violations: List[str] = []
@@ -313,15 +317,8 @@ def analyze_case(algo: str, topology: str, wire_spec: Optional[str],
         perms = permute_operands(hlo_text)
         permute_dtypes = tuple(sorted({p.dtype for p in perms}))
         if wire is not None and not isinstance(wire, IdentityWire):
-            # DeepSqueeze's receive side reconstructs the neighbor model as
-            # roll(X, s) - decode(rolled payload) (decentralized.py
-            # _deepsqueeze_round), so its sharded runtime rolls the dense
-            # model ALONGSIDE the compressed payload — a machine-checked
-            # known gap (see docs/static-analysis.md and the ROADMAP item),
-            # not a regression this analyzer should mask elsewhere.
             violations += check_permute_payload_whitelist(
-                hlo_text, wire, state.params, n_devices=n,
-                allow_dense=(algo == "deepsqueeze"))
+                hlo_text, wire, state.params, n_devices=n)
         elif not perms:
             violations.append("no collective-permute found in compiled HLO")
         violations += check_no_f64(hlo_text)
@@ -348,6 +345,7 @@ DEFAULT_GRID: Tuple[Tuple[str, str, Optional[str], float], ...] = tuple(
         ("ecd", "torus", "quant:4", 0.0),
         ("choco", "ring", "sign", 0.0),
         ("deepsqueeze", "ring", "sign", 0.0),
+        ("dcd", "ring", "lowrank:2", 0.0),
         ("dcd", "ring", "quant:4", 0.2),
         ("dpsgd", "ring", None, 0.0),
     ])

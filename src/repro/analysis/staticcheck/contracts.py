@@ -190,6 +190,14 @@ def _parse_wire_salts(tree: ast.AST):
     return None
 
 
+def _is_encode_tree_call(func: ast.AST) -> bool:
+    """``wire.encode_tree(...)`` or the runtime's bare ``encode_tree(...)``
+    closure (which threads stateful-wire aux but keeps the salt keyword)."""
+    if isinstance(func, ast.Attribute):
+        return func.attr == "encode_tree"
+    return isinstance(func, ast.Name) and func.id == "encode_tree"
+
+
 def _round_fn_salts(tree: ast.AST):
     """{family: [(salt, line), ...]} from encode_tree(..., salt=N) calls
     inside each ``_<family>_round`` function."""
@@ -203,8 +211,7 @@ def _round_fn_salts(tree: ast.AST):
         family = m.group(1)
         for sub in ast.walk(node):
             if not (isinstance(sub, ast.Call)
-                    and isinstance(sub.func, ast.Attribute)
-                    and sub.func.attr == "encode_tree"):
+                    and _is_encode_tree_call(sub.func)):
                 continue
             salt = None
             for kw in sub.keywords:

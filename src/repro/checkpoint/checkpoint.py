@@ -4,6 +4,13 @@ Flattens with jax.tree path names, stores dtype-preserving arrays plus a small
 JSON manifest (step, metadata, treedef key list).  Atomic writes (tmp + rename)
 so a crashed save never corrupts the latest checkpoint.  Keeps the last ``keep``
 checkpoints per directory.
+
+Restore is structure-driven (``like``), so state whose *key* encodes its
+config fails loudly on a config mismatch: the degraded-mode freshness vectors
+(``fresh{s}@drop{salt}``) KeyError under a different drop salt, and a
+stateful wire format's codec aux (``wire_lowrank:<rank>`` — the warm-started
+power-iteration factors) KeyErrors when restored at a different rank, instead
+of silently splicing incompatible factor state into the trajectory.
 """
 from __future__ import annotations
 

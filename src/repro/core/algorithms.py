@@ -196,25 +196,33 @@ def deepsqueeze_step(state, grads, key, lr, W, comp) -> AlgoState:
     """DeepSqueeze (Tang et al. 2019): error-compensated compression.
 
     ``aux`` holds the per-node residual ``E`` (zero at t=0).  Each step the
-    error-compensated update ``V = lr G + E`` is compressed, the residual is
-    rebuilt from the *measured* decode, and the compressed message is what
-    gets gossiped (neighbors mix ``x_j - d_j``):
+    error-compensated **model value** ``V = X_half + E`` is compressed —
+    the paper's wire quantity, which is all a receiver needs — the residual
+    is rebuilt from the *measured* decode, and the mixing applies the
+    consensus displacement of the compressed values:
 
-        V     = lr G + E
-        D     = C(V)
-        E'    = V - D
-        X_new = (X - D) W
+        X_half = X - lr G
+        V      = X_half + E
+        D      = C(V)
+        E'     = V - D
+        X_new  = X_half + D W - D
 
-    Stateless across neighbors (no replica trees): every node only carries
-    its own residual, and the compression error never accumulates because
-    whatever the codec dropped this round rides into the next message.
+    At identity compression with ``E = 0`` this is exactly ``X_half W``
+    (D-PSGD).  Stateless across neighbors (no replica trees): every node
+    only carries its own residual, the compression error never accumulates
+    because whatever the codec dropped this round rides into the next
+    message, and nothing dense ever needs to cross an edge — the runtime
+    (and :class:`GossipReference`) implement this identical recursion
+    wire-honestly, with only payload containers riding the permutes.
     """
     X, E = state.params, state.aux
-    V = jax.tree.map(lambda e, g: e + lr * g.astype(e.dtype), E, grads)
+    X_half = _sgd(X, grads, lr)
+    V = jax.tree.map(lambda x, e: x + e, X_half, E)
     D = comp.tree_apply(key, V)
     E_new = jax.tree.map(lambda v, d: v - d, V, D)
-    X_eff = jax.tree.map(lambda x, d: (x - d).astype(x.dtype), X, D)
-    X_new = mix(W, X_eff)
+    mixed = mix(W, D)
+    X_new = jax.tree.map(lambda x, m, d: (x + (m - d)).astype(x.dtype),
+                         X_half, mixed, D)
     return AlgoState(X_new, state.step + 1, E_new)
 
 
@@ -315,6 +323,8 @@ class GossipReference:
         if self.drop is not None and self.name in ("dcd", "ecd", "choco"):
             aux.update({fresh_key(s, self.drop.salt): jnp.ones((n,), jnp.float32)
                         for s in sched.shift_union})
+        if self.wire is not None and self.wire.stateful:
+            aux[self.wire.aux_name] = self.wire.init_aux(X)
         return AlgoState(params=X, step=jnp.asarray(0, jnp.int32), aux=aux)
 
     def step_fn(self) -> Callable[[AlgoState, Any, jax.Array, jax.Array], AlgoState]:
@@ -338,6 +348,21 @@ class GossipReference:
             likes = jax.tree.map(
                 lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), like_tree)
             return wire.decode_tree(tdef, payload, likes)
+
+        stateful = wire is not None and wire.stateful
+        wkey = wire.aux_name if stateful else None
+
+        def encode(tree, enc_step, aux):
+            # same aux threading as the runtime's encode_tree closure:
+            # stateless wires leave the dict untouched
+            if not stateful:
+                tdef, payload = wire.encode_tree(tree, enc_step, salt)
+                return tdef, payload, aux
+            tdef, payload, waux = wire.encode_tree_stateful(
+                tree, enc_step, salt, aux[wkey])
+            aux = dict(aux)
+            aux[wkey] = waux
+            return tdef, payload, aux
 
         def axpy(acc, dec, w=1.0, acc_w=1.0):
             return jax.tree.map(
@@ -363,7 +388,7 @@ class GossipReference:
                 return X, aux
 
             if name == "naive":
-                tdef, payload = wire.encode_tree(X, enc_step, salt)
+                tdef, payload, aux = encode(X, enc_step, aux)
                 dec = decode_f32(tdef, payload, X)
                 X = plan_mix_gated(rnd, dec,
                                    {s: roll_tree(dec, s) for s in rnd.shift_list},
@@ -378,7 +403,7 @@ class GossipReference:
                 if grads is not None:
                     X_half = _sgd(X_half, grads, lr)
                 Z = jax.tree.map(lambda a, b: a - b, X_half, X)
-                tdef, payload = wire.encode_tree(Z, enc_step, salt)
+                tdef, payload, aux = encode(Z, enc_step, aux)
                 dec = decode_f32(tdef, payload, Z)
                 X = axpy(X, dec)
                 for s in union:
@@ -399,7 +424,7 @@ class GossipReference:
                 # (mixed - hat_self) term zeroes exactly the dropped edges.
                 X_half = _sgd(X, grads, lr) if grads is not None else X
                 Z = jax.tree.map(lambda a, b: a - b, X_half, aux["hat_self"])
-                tdef, payload = wire.encode_tree(Z, enc_step, salt)
+                tdef, payload, aux = encode(Z, enc_step, aux)
                 dec = decode_f32(tdef, payload, Z)
                 aux["hat_self"] = axpy(aux["hat_self"], dec)
                 for s in union:
@@ -416,20 +441,23 @@ class GossipReference:
                 return X, aux
 
             if name == "deepsqueeze":
-                # error-compensated update: compress V = lr G + E, rebuild the
-                # residual from the measured decode, gossip the compressed
-                # message (neighbors mix x_j - d_j); stateless across
-                # neighbors, so drops are handled purely by the gated mixing
-                E = aux["err_self"]
-                V = jax.tree.map(lambda e, g: e + lr * g.astype(e.dtype),
-                                 E, grads) if grads is not None else E
-                tdef, payload = wire.encode_tree(V, enc_step, salt)
+                # wire-honest error-compensated form (mirrors the sharded
+                # round): compress the error-compensated MODEL value
+                # V = X + E, rebuild the residual from the measured decode,
+                # and apply the consensus displacement on the decoded
+                # payloads — X + mix(D) - D_self — never on dense X.  The
+                # receive side is stateless; a dropped edge renormalizes
+                # like D-PSGD
+                X_half = _sgd(X, grads, lr) if grads is not None else X
+                V = jax.tree.map(lambda x, e: x + e, X_half, aux["err_self"])
+                tdef, payload, aux = encode(V, enc_step, aux)
                 dec = decode_f32(tdef, payload, V)
                 aux["err_self"] = axpy(V, dec, -1.0)
-                X_eff = axpy(X, dec, -1.0)
-                nbrs = {s: axpy(roll_tree(X, s), roll_tree(dec, s), -1.0)
-                        for s in rnd.shift_list}
-                X = plan_mix_gated(rnd, X_eff, nbrs, gates)
+                nbrs = {s: roll_tree(dec, s) for s in rnd.shift_list}
+                mixed = plan_mix_gated(rnd, dec, nbrs, gates)
+                X = jax.tree.map(
+                    lambda x, m, d: (x + (m - d)).astype(x.dtype),
+                    X_half, mixed, dec)
                 return X, aux
 
             # ecd
@@ -439,7 +467,7 @@ class GossipReference:
             X_next = _sgd(X_mix, grads, lr) if grads is not None else X_mix
             Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s_t) * a + 0.5 * s_t * b,
                              X, X_next)
-            tdef, payload = wire.encode_tree(Z, enc_step, salt)
+            tdef, payload, aux = encode(Z, enc_step, aux)
             dec = decode_f32(tdef, payload, Z)
             est_decay, blend = 1.0 - 2.0 / s_t, 2.0 / s_t
             aux["tilde_self"] = axpy(aux["tilde_self"], dec, blend, est_decay)

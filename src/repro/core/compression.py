@@ -392,11 +392,16 @@ class WireViewCompressor(Compressor):
 
     The named compressor classes above exist for their paper-facing bounds
     (``alpha_bound``/``delta_bound``); a format without such bounds — e.g. the
-    per-leaf :class:`~repro.distributed.wire.AdaptiveWire` combinator — still
-    needs a stacked view for :func:`compressor_for`.  Unlike the base class,
+    per-leaf :class:`~repro.distributed.wire.AdaptiveWire` combinator, or the
+    structure-exploiting :class:`~repro.distributed.wire.LowRankWire` (whose
+    rank-r factor payloads have no leafwise alpha: the error depends on the
+    leaf's spectrum, and shrinks across warm-started rounds) — still needs a
+    stacked view for :func:`compressor_for`.  Unlike the base class,
     ``compress``/``decompress`` do NOT flatten the leaf: shape-routed formats
-    must see the real leaf shape, and ``encode``/``decode`` are shape-agnostic
-    for every registered format (blocking is along the last dim only)."""
+    must see the real leaf shape (lowrank factors stacked matrix leaves and
+    falls back to fp16 below 3-D), and ``encode``/``decode`` are
+    shape-agnostic for every registered format (blocking is along the last
+    dim only)."""
 
     wire_obj: WireFormat = dataclasses.field(default_factory=IdentityWire)
     salt: int = 0

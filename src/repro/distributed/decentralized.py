@@ -30,9 +30,17 @@ Algorithm state (beyond params X and optimizer moments):
   Koloskova et al. compressed-consensus estimates x-hat, advanced by the
   received compressed differences; mixing happens on the estimates with
   consensus stepsize ``gamma``.
-* DeepSqueeze: ``err_self`` — the local error-feedback residual; the update
-  plus residual is compressed, the leftover becomes the next residual, and the
-  plain (uncompensated-state) gossip mixes ``X - decode``.
+* DeepSqueeze: ``err_self`` only (the local error-feedback residual).  The
+  error-compensated MODEL value ``V = X + E`` is compressed — the paper's
+  wire quantity, complete on its own — the leftover becomes the next
+  residual, and mixing applies the consensus displacement of the decoded
+  payloads (``X + mix(D) - D_self``): the receive side is stateless and the
+  dense model never rides a collective-permute, only wire containers do.
+
+A *stateful* wire format (``lowrank:<r>:warm``) adds one more aux entry under
+``wire.aux_name`` holding its per-leaf codec state — the warm-started
+power-iteration factors — initialised by ``init_dist_state(..., wire=...)``
+and resynced at phase boundaries by ``rekey_dist_state(..., wire=...)``.
 
 Stochastic rounding uses the same counter-based PCG hash as the Pallas kernel
 (kernels/ref.py), seeded by (step, salt, leaf) — deterministic, key-free inside
@@ -98,7 +106,7 @@ def _resolve_plan(plan, topology: Optional[str]):
 
 def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
                     aux_dtype=None, topology: Optional[str] = None,
-                    drop=None) -> DistState:
+                    drop=None, wire=None) -> DistState:
     """``plan``: a :class:`GossipPlan` / :class:`GossipSchedule` (or an int
     node count => ring) — one replica/estimate tree per shift in the plan (for
     a schedule: per shift in the union over rounds; one tree serves every
@@ -112,7 +120,13 @@ def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
     the replica-tracking algorithms it adds one degraded-mode freshness
     vector per union shift — keyed ``fresh{s:+d}@drop{salt}`` so restoring a
     failure-mode checkpoint under a *different* drop salt fails loudly with a
-    KeyError instead of silently splicing failure traces."""
+    KeyError instead of silently splicing failure traces.
+
+    ``wire`` (a :class:`~repro.distributed.wire.WireFormat` or spec string):
+    required when the codec is *stateful* (``lowrank:<r>:warm``) — its
+    per-leaf codec state is added under ``wire.aux_name`` (rank-embedded, so
+    restoring a checkpoint with a mismatched rank KeyErrors).  Stateless
+    wires ignore it."""
     sched = as_schedule(_resolve_plan(plan, topology))
     n_nodes = sched.n
     drop = make_drop_spec(drop)
@@ -139,12 +153,16 @@ def init_dist_state(algo: str, params_single: Any, plan, opt: Optimizer,
     if drop is not None and algo in ("dcd", "ecd", "choco"):
         aux.update({fresh_key(s, drop.salt): jnp.ones((n_nodes,), jnp.float32)
                     for s in sched.shift_union})
+    if wire is not None:
+        wire = make_wire_format(wire)
+        if wire.stateful:
+            aux[wire.aux_name] = wire.init_aux(X)
     return DistState(params=X, opt=opt.init(X), aux=aux,
                      step=jnp.zeros((), jnp.int32))
 
 
 def rekey_dist_state(state: DistState, algo: str, plan, aux_dtype=None,
-                     drop=None) -> DistState:
+                     drop=None, wire=None) -> DistState:
     """Re-key the gossip aux trees for a NEW ``{plan, wire}`` at a phase
     boundary (``launch/train.py --phase-plan``), keeping params, optimizer
     moments and the step counter.
@@ -155,7 +173,9 @@ def rekey_dist_state(state: DistState, algo: str, plan, aux_dtype=None,
     wire.  The honest reset is a **resync**: every replica/estimate becomes
     the exact current neighbor params (``roll(X, s)`` — one full-precision
     payload round on the real network, which is what a deployment pays at a
-    phase switch), DeepSqueeze residuals restart at zero, and degraded-mode
+    phase switch), DeepSqueeze residuals restart at zero, stateful-wire codec
+    state restarts from ``wire.init_aux`` (a pure function of the param
+    shapes — cold factors, re-warmed within a few rounds), and degraded-mode
     freshness restarts at fully-fresh.  From there the differential
     invariants of the new phase hold exactly as from ``init_dist_state`` —
     a stacked :class:`~repro.core.algorithms.GossipReference` initialised
@@ -189,6 +209,10 @@ def rekey_dist_state(state: DistState, algo: str, plan, aux_dtype=None,
     if drop is not None and algo in ("dcd", "ecd", "choco"):
         aux.update({fresh_key(s, drop.salt): jnp.ones((n_nodes,), jnp.float32)
                     for s in sched.shift_union})
+    if wire is not None:
+        wire = make_wire_format(wire)
+        if wire.stateful:
+            aux[wire.aux_name] = wire.init_aux(X)
     return state._replace(aux=aux)
 
 
@@ -335,6 +359,23 @@ def make_dist_train_step(
                 lambda a, d: (acc_weight * a + weight * d).astype(a.dtype),
                 acc_tree, dec)
 
+    wire_aux_key = wire.aux_name if (wire is not None and wire.stateful) \
+        else None
+
+    def encode_tree(tree, enc_step, *, salt, aux):
+        # Encode with optional per-leaf codec state (the lowrank warm-start
+        # factors, keyed ``wire.aux_name`` in the DistState aux — present iff
+        # init_dist_state was given the wire).  Stateless formats pass the
+        # aux dict through untouched, so the compiled program is unchanged.
+        if wire_aux_key is None:
+            tdef, payloads = wire.encode_tree(tree, enc_step, salt)
+            return tdef, payloads, aux
+        aux = dict(aux)
+        tdef, payloads, waux = wire.encode_tree_stateful(
+            tree, enc_step, salt, aux[wire_aux_key])
+        aux[wire_aux_key] = waux
+        return tdef, payloads, aux
+
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn, has_aux=True), spmd_axis_name="node")
 
     # ---- one gossip round per algorithm ----------------------------------
@@ -377,7 +418,7 @@ def make_dist_train_step(
     def _naive_round(rnd, enc_step, carry, upd):
         # compress the exchanged models directly — provably non-convergent
         X_cur, aux_d = carry
-        tdef, payload = wire.encode_tree(X_cur, enc_step, salt=1)
+        tdef, payload, aux_d = encode_tree(X_cur, enc_step, salt=1, aux=aux_d)
         dec_self = wire.decode_tree(tdef, payload, X_cur)
         nbrs = {s: wire.decode_tree(tdef, _roll(payload, s), X_cur)
                 for s in rnd.shift_list}
@@ -406,7 +447,7 @@ def make_dist_train_step(
         if upd is not None:
             X_half = apply_updates(X_half, upd)
         Z = jax.tree.map(lambda a, b: a - b, X_half, X_cur)
-        tdef, payload = wire.encode_tree(Z, enc_step, salt=2)
+        tdef, payload, aux_d = encode_tree(Z, enc_step, salt=2, aux=aux_d)
         # receive side: one fused unpack+dequant+axpy kernel per leaf; every
         # union replica advances with the rolled payload so rep{s} keeps
         # tracking roll(X, s) through every round (under drops: through every
@@ -436,7 +477,7 @@ def make_dist_train_step(
         X_next = apply_updates(X_mix, upd) if upd is not None else X_mix
         Z = jax.tree.map(lambda a, b: (1.0 - 0.5 * s_t) * a + 0.5 * s_t * b,
                          X_cur, X_next)
-        tdef, payload = wire.encode_tree(Z, enc_step, salt=3)
+        tdef, payload, aux_d = encode_tree(Z, enc_step, salt=3, aux=aux_d)
         est_decay = 1.0 - 2.0 / s_t
         blend = 2.0 / s_t
         # est_decay*tilde + blend*decode in ONE fused pass per leaf: the decay
@@ -465,7 +506,7 @@ def make_dist_train_step(
             aux_d = _advance_freshness(aux_d, masks)
         X_half = apply_updates(X_cur, upd) if upd is not None else X_cur
         Z = jax.tree.map(lambda a, b: a - b, X_half, aux_d["hat_self"])
-        tdef, payload = wire.encode_tree(Z, enc_step, salt=4)
+        tdef, payload, aux_d = encode_tree(Z, enc_step, salt=4, aux=aux_d)
         # every node decodes the SAME words it sent, so hat_self stays equal
         # to every neighbor's hat{s} of this node — the shared-estimate
         # invariant ``hat{s} == roll(hat_self, s)`` is tested (drop-free)
@@ -489,26 +530,33 @@ def make_dist_train_step(
         return X_new, aux_d
 
     def _deepsqueeze_round(rnd, enc_step, carry, upd):
-        # DeepSqueeze: compress update + residual, keep the leftover as the
-        # next residual, gossip X - decode.  No estimate trees — the round is
-        # stateless on the receive side, so dropped edges just lose one
-        # (error-compensated) update instead of desyncing a replica.
+        # DeepSqueeze, wire-honest form: compress the error-compensated MODEL
+        # value V = X + E (the paper's actual wire quantity) and apply the
+        # consensus displacement on decoded payloads only,
+        # X <- X_half + sum_j W_ij D_j - D_self, so the receive side is
+        # stateless (no replicas, nothing to desync) and the dense model
+        # never rides a permute — only wire containers do (the analyzer's
+        # old allow_dense exemption is gone).  At identity compression with
+        # E = 0 this is exactly X_half W (D-PSGD); the residual keeps
+        # whatever the codec dropped on the sender, and a dropped edge just
+        # renormalizes the round like D-PSGD.
         X_cur, aux_d = carry
         aux_d = dict(aux_d)
-        E = aux_d["err_self"]
-        # upd is the optimizer delta (-lr g), and DeepSqueeze compresses
-        # lr g + e, so V = e - upd; gradient-free rounds flush the residual
-        V = jax.tree.map(lambda e, u: e - u, E, upd) if upd is not None else E
-        tdef, payload = wire.encode_tree(V, enc_step, salt=5)
+        X_half = apply_updates(X_cur, upd) if upd is not None else X_cur
+        V = jax.tree.map(lambda x, e: x + e, X_half, aux_d["err_self"])
+        tdef, payload, aux_d = encode_tree(V, enc_step, salt=5, aux=aux_d)
         aux_d["err_self"] = dec_axpy(tdef, payload, V, -1.0)
-        X_eff = dec_axpy(tdef, payload, X_cur, -1.0)
-        nbrs = {s: dec_axpy(tdef, _roll(payload, s), _roll(X_cur, s), -1.0)
+        zero = jax.tree.map(jnp.zeros_like, X_half)
+        d_self = dec_axpy(tdef, payload, zero, 1.0)
+        nbrs = {s: dec_axpy(tdef, _roll(payload, s), zero, 1.0)
                 for s in rnd.shift_list}
         if drop is None:
-            X_new = plan_mix(rnd, X_eff, nbrs)
+            mixed = plan_mix(rnd, d_self, nbrs)
         else:
-            X_new = plan_mix_gated(rnd, X_eff, nbrs,
+            mixed = plan_mix_gated(rnd, d_self, nbrs,
                                    _round_masks(enc_step, rnd.shift_list))
+        X_new = jax.tree.map(lambda x, m, d: (x + (m - d)).astype(x.dtype),
+                             X_half, mixed, d_self)
         return X_new, aux_d
 
     round_fn = {"dpsgd": _dpsgd_round, "naive": _naive_round,

@@ -34,6 +34,10 @@ Registered implementations (``make_wire_format`` specs):
   bits/element at block 1024; biased — the error-feedback algorithms' regime).
 * ``fp16``     — half-precision cast (deterministic, 16 wire bits/element).
 * ``identity`` — no-op (full-precision wire; recovers exact D-PSGD).
+* ``lowrank``  — rank-r power-iteration factors (PowerGossip) for matrix
+  leaves, ``32·r·(m+n)/(m·n)`` measured wire bits/element; 1-D leaves fall
+  through to fp16.  ``lowrank:<r>:warm`` warm-starts the right factor across
+  rounds through the optional per-leaf aux channel (see :class:`LowRankWire`).
 * ``adaptive`` — per-leaf combinator: routes each leaf to a ``small=`` or
   ``large=`` sub-format by per-replica element count, with optional
   ``leaf.<pattern>=`` per-leaf-path overrides (see :class:`AdaptiveWire`).
@@ -238,6 +242,41 @@ class WireFormat:
         8-wide bias leaf) stay on the jnp reference path — negligible traffic,
         and Mosaic never sees an off-contract tile on real TPUs."""
         return block % 128 == 0
+
+    # --- optional cross-step codec state (per-leaf aux channel) -----------
+    @property
+    def stateful(self) -> bool:
+        """True when the codec carries cross-step per-leaf state (e.g. the
+        warm-started power-iteration factors of ``lowrank:<r>:warm``).  The
+        runtime then threads :meth:`init_aux`'s tree through
+        :meth:`encode_tree_stateful` under the :attr:`aux_name` key of the
+        plan-keyed DistState aux — initialized by ``init_dist_state``,
+        checkpointed like every other aux leaf, and re-keyed at phase
+        boundaries by ``rekey_dist_state``."""
+        return False
+
+    @property
+    def aux_name(self) -> str:
+        """DistState aux key the codec state rides under.  Parameterized
+        formats embed their identity (``wire_lowrank:2``), so restoring a
+        checkpoint into a *different* parameterization fails loudly with the
+        checkpoint loader's missing-leaf KeyError instead of silently feeding
+        mis-shaped factors."""
+        return f"wire_{self.name}"
+
+    def init_aux(self, tree: Any) -> Dict[str, jax.Array]:
+        """Initial codec state for ``tree`` (stacked ``(n, ...)`` leaves).
+        Stateless formats carry none."""
+        return {}
+
+    def encode_tree_stateful(self, tree: Any, step: jax.Array, salt: int,
+                             aux: Dict[str, jax.Array]):
+        """Like :meth:`encode_tree`, but threading the per-leaf codec state:
+        returns ``(treedef, payloads, new_aux)``.  The default (stateless
+        formats) ignores and passes through ``aux`` — the runtime calls this
+        unconditionally so round fns stay codec-agnostic."""
+        treedef, payloads = self.encode_tree(tree, step, salt)
+        return treedef, payloads, aux
 
     # --- tree-level plumbing (one step/salt/leaf seeding path) ------------
     def encode_tree(self, tree: Any, step: jax.Array, salt: int):
@@ -648,6 +687,265 @@ class IdentityWire(WireFormat):
         return payload["values"].astype(like.dtype)
 
 
+# ------------------------------------------------------------ low-rank codec
+
+def _batch_dot(a: jax.Array, b: jax.Array, a_dim: int, b_dim: int) -> jax.Array:
+    """``dot_general`` contracting ``a``'s axis ``a_dim`` (negative, counted
+    from the end) with ``b``'s ``b_dim``, batching over the shared leading
+    dims.  Every low-rank matmul — project, re-project, reconstruct — goes
+    through this one helper so the dimension numbers (and therefore the
+    f32 accumulation order) are identical across encode, decode, and the
+    kernels/ref.py oracles."""
+    lead = tuple(range(a.ndim - 2))
+    return jax.lax.dot_general(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        (((a.ndim + a_dim,), (b.ndim + b_dim,)), (lead, lead)),
+        preferred_element_type=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankWire(WireFormat):
+    """Rank-r power-iteration wire format (PowerGossip, Vogels et al.).
+
+    The first codec that exploits leaf *structure* instead of treating every
+    leaf as a flat stream: a matrix leaf — stacked shape ``(nodes..., m, n)``,
+    i.e. ``ndim >= 3`` with the leading node axis — ships one power-iteration
+    step of its last-two-dims view as rank-``r`` factors:
+
+        P  = M @ V0          (project onto the right factor)
+        P  = MGS(P)          (orthonormalize columns, safe-norm'd)
+        Vt = M^T @ P         (re-project)
+        payload = {p: (..., m, r) f32, v: (..., n, r) f32}
+        decode  = P @ Vt^T   (rank-r reconstruction)
+
+    so the wire cost is ``32·r·(m+n)`` bits against the dense ``32·m·n`` —
+    measured off the real payload containers via eval_shape like every other
+    format, the formula is just what the measurement comes out to.  Leaves
+    with ``ndim <= 2`` (a stacked 1-D param) fall through to the fp16
+    container: rank structure is a property of matrices, and the small leaves
+    are negligible traffic.
+
+    ``warm=False`` (default) re-seeds ``V0`` from the ``(step, salt, leaf)``
+    counter every round — a seeded uniform ``(n, r)`` start shared across the
+    node axis, so the per-shard ``(1, m, n)`` slab and the stacked
+    ``(nodes, m, n)`` leaf encode bit-identical words (the sharded==stacked
+    differential contract).  ``warm=True`` is the PowerGossip mode: the codec
+    declares itself :attr:`stateful` and carries last round's ``Vt`` per
+    matrix leaf through the aux channel (:meth:`init_aux` /
+    :meth:`encode_tree_stateful`), making each round one more subspace
+    iteration on the evolving difference — reconstruction error *decreases*
+    with rounds per step where every other codec's is i.i.d. per round.  The
+    warm factors ride the plan-keyed DistState aux under
+    ``wire_lowrank:<r>`` (rank-embedded: restoring into a different rank
+    KeyErrors in the checkpoint loader), and phase boundaries re-seed them
+    via ``rekey_dist_state`` exactly like algorithm aux.
+
+    The decode side routes matrix leaves through the fused
+    factor-matmul-accumulate Pallas kernel (`kernels/lowrank.py`) behind the
+    same 128-lane gate as every packed codec; the kernel tiles only output
+    rows with the contraction unsplit, so kernel == oracle == codec word for
+    word."""
+
+    rank: int = 2
+    warm: bool = False
+
+    name: ClassVar[str] = "lowrank"
+
+    def __post_init__(self):
+        assert 1 <= int(self.rank) <= 128, \
+            f"lowrank rank must be in 1..128, got {self.rank}"
+        object.__setattr__(self, "rank", int(self.rank))
+        object.__setattr__(self, "warm", bool(self.warm))
+
+    @property
+    def packed(self) -> bool:
+        """Factor payloads have a fused decode-axpy kernel (the gate is the
+        same 128-lane contract); the containers are plain f32 factors, so
+        "packed" here keys the fused receive path, not bit-packing."""
+        return True
+
+    @property
+    def wire_format(self) -> str:
+        return f"lowrank-r{self.rank}-{'warm' if self.warm else 'cold'}-f32"
+
+    @property
+    def stateful(self) -> bool:
+        return self.warm
+
+    @property
+    def aux_name(self) -> str:
+        return f"wire_lowrank:{self.rank}"
+
+    @staticmethod
+    def _eligible(shape) -> bool:
+        """Matrix routing is by STACKED shape: ``(nodes..., m, n)`` needs
+        ``ndim >= 3`` so that a stacked 1-D param (``(nodes, d)``) is not
+        mistaken for a matrix — and so the per-shard ``(1, m, n)`` slab
+        inside shard_map routes identically to the stacked leaf."""
+        return len(shape) >= 3
+
+    def _factor_init(self, n: int, seed) -> jax.Array:
+        """Seeded pseudo-random ``(n, r)`` start factor, shared across the
+        node axis (no leading-dim dependence — the slab/stacked bit-equality
+        contract).  Centered uniform from the same counter-hash primitive as
+        the stochastic quantizer; never zero, so the safe-norm
+        orthonormalization cannot collapse the subspace."""
+        shape = (n, self.rank)
+        idx = (jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+               * jnp.uint32(self.rank)
+               + jax.lax.broadcasted_iota(jnp.uint32, shape, 1))
+        u = uniform_from_hash(idx, jnp.asarray(seed).reshape(()).astype(jnp.uint32))
+        return (u - jnp.float32(0.5)).astype(jnp.float32)
+
+    def _encode_leaf(self, leaf: jax.Array, v0: jax.Array):
+        """One power-iteration step of ``leaf``'s trailing (m, n) view against
+        ``v0`` ((n, r) cold start, or (..., n, r) warm factors batched over
+        the node axis).  Returns (payload, new right factor)."""
+        from repro.kernels.ref import lowrank_orthonormalize_ref
+
+        m = leaf.astype(jnp.float32)
+        if v0.ndim == 2:
+            p = jax.lax.dot_general(
+                m, v0, (((m.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            p = _batch_dot(m, v0, -1, -2)
+        p = lowrank_orthonormalize_ref(p)
+        vt = _batch_dot(m, p, -2, -2)
+        return {"p": p, "v": vt}, vt
+
+    # --- per-leaf protocol -------------------------------------------------
+    def encode(self, leaf: jax.Array, seed: jax.Array) -> Payload:
+        """Cold-start encode (also the warm format's shape-accounting path:
+        factor shapes don't depend on warmth).  1-D leaves ride fp16."""
+        if not self._eligible(leaf.shape):
+            return {"values": leaf.astype(jnp.float16)}
+        payload, _ = self._encode_leaf(leaf, self._factor_init(leaf.shape[-1],
+                                                               seed))
+        return payload
+
+    def decode(self, payload: Payload, like) -> jax.Array:
+        if "values" in payload:
+            return payload["values"].astype(like.dtype)
+        return _batch_dot(payload["p"], payload["v"], -1, -1).astype(like.dtype)
+
+    def decode_axpy(self, payload: Payload, acc: jax.Array, weight,
+                    acc_weight=1.0) -> jax.Array:
+        """Matrix leaves route through the fused factor-matmul-accumulate
+        kernel: the rank-r reconstruction is built directly into the mix
+        accumulator, one (m, n) VMEM pass per node slab, dense fp32 never in
+        HBM.  Off-gate (last dim below the 128-lane contract) and fp16
+        fallthrough leaves take the base jnp path."""
+        if "values" in payload or not self._kernel_ok(acc.shape[-1]):
+            return super().decode_axpy(payload, acc, weight, acc_weight)
+        return _fused_lowrank_axpy_leaf(payload["p"], payload["v"], acc,
+                                        weight=weight, acc_weight=acc_weight)
+
+    # --- cross-step codec state (the warm-start factor channel) -----------
+    def init_aux(self, tree: Any) -> Dict[str, jax.Array]:
+        """Warm-start factors for every matrix leaf of the stacked ``tree``,
+        keyed by flatten-order leaf index.  A pure function of shapes — the
+        cold factor at a fixed constant seed, broadcast over the node axis —
+        so ``init_dist_state`` and ``rekey_dist_state`` produce identical
+        factors and a phase boundary is an honest re-key, not hidden state.
+        Never zeros: a zero factor is a fixed point of the power iteration
+        (P = M @ 0 = 0 stays 0 through the safe-norm MGS)."""
+        if not self.warm:
+            return {}
+        aux: Dict[str, jax.Array] = {}
+        for li, leaf in enumerate(jax.tree_util.tree_leaves(tree)):
+            if self._eligible(leaf.shape):
+                f = self._factor_init(leaf.shape[-1],
+                                      jnp.uint32(0x9E3779B9 ^ (li * 101)))
+                aux[str(li)] = jnp.broadcast_to(
+                    f, leaf.shape[:-2] + f.shape)
+        return aux
+
+    def encode_tree_stateful(self, tree: Any, step: jax.Array, salt: int,
+                             aux: Dict[str, jax.Array]):
+        """Warm path: project each matrix leaf against ITS carried factor and
+        write the re-projected factor back — one more power iteration per
+        round.  Cold mode defers to the stateless tree encode."""
+        if not self.warm:
+            return super().encode_tree_stateful(tree, step, salt, aux)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        new_aux = dict(aux)
+        payloads = []
+        for li, leaf in enumerate(leaves):
+            if self._eligible(leaf.shape):
+                payload, vt = self._encode_leaf(leaf, aux[str(li)])
+                new_aux[str(li)] = vt
+                payloads.append(payload)
+            else:
+                payloads.append(
+                    self.encode(leaf, leaf_seed(step, salt, li)))
+        return treedef, payloads, new_aux
+
+    # --- accounting --------------------------------------------------------
+    def wire_bits_per_element(self, shape=None) -> float:
+        """Measured off the real factor containers via eval_shape.  A 2-D
+        ``(m, n)`` shape is taken as the un-stacked matrix leaf (measured as
+        its ``(1, m, n)`` stacked form — same element count, so the figure is
+        exactly ``32·r·(m+n)/(m·n)``); no shape gives the bulk asymptote on a
+        1024x1024 leaf; 1-D shapes report the fp16 fallthrough figure."""
+        if shape is None:
+            shape = (1, 1024, 1024)
+        shape = tuple(int(s) for s in shape)
+        if len(shape) == 2:
+            shape = (1,) + shape
+        leaf = jax.ShapeDtypeStruct(shape if shape else (1,), jnp.float32)
+        payload = jax.eval_shape(
+            lambda l: self.encode(l, jnp.zeros((), jnp.uint32)), leaf)
+        return 8.0 * _payload_nbytes(payload) / \
+            float(np.prod(shape, dtype=np.int64) if shape else 1)
+
+    @staticmethod
+    def parse_spec_args(args) -> Dict[str, Any]:
+        """Spec-arg parser for ``lowrank:<rank>[:warm]``: the bare literal
+        ``warm`` sets the flag (``lowrank:2:warm``); ``key=value`` args pass
+        through; the single positional is the rank."""
+        kwargs: Dict[str, Any] = {}
+        pos = 0
+        for part in args:
+            for piece in part.split(","):
+                if not piece:
+                    continue
+                if piece == "warm":
+                    kwargs["warm"] = True
+                elif "=" in piece:
+                    key, val = piece.split("=", 1)
+                    kwargs[key] = _coerce(val)
+                else:
+                    if pos >= 1:
+                        raise ValueError(
+                            f"lowrank spec takes one positional arg (rank); "
+                            f"unexpected {piece!r}")
+                    kwargs["rank"] = int(piece)
+                    pos += 1
+        return kwargs
+
+
+def _fused_lowrank_axpy_leaf(p: jax.Array, v: jax.Array, acc: jax.Array, *,
+                             weight, acc_weight=1.0) -> jax.Array:
+    """One matrix leaf of :meth:`LowRankWire.decode_axpy` through the fused
+    kernel: fold the leading (node) dims into a batch axis and vmap the 2-D
+    kernel over it — the leading axis stays outermost, so the fold preserves
+    leading-dim sharding under shard_map exactly like the other fused
+    leaves (the right factor differs per node, so rows cannot fold)."""
+    from repro.kernels.lowrank import lowrank_axpy_2d
+
+    lead = acc.shape[:-2]
+    mm, nn = acc.shape[-2:]
+    r = p.shape[-1]
+    b = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    fn = functools.partial(lowrank_axpy_2d, weight=weight,
+                           acc_weight=acc_weight,
+                           interpret=jax.default_backend() != "tpu")
+    out = jax.vmap(fn)(p.reshape(b, mm, r), v.reshape(b, nn, r),
+                       acc.astype(jnp.float32).reshape(b, mm, nn))
+    return out.reshape(*lead, mm, nn).astype(acc.dtype)
+
+
 # --------------------------------------------------------- adaptive combinator
 
 def leaf_path_str(path) -> str:
@@ -886,6 +1184,8 @@ def wire_spec(w: WireFormat) -> str:
         return "fp16"
     if isinstance(w, IdentityWire):
         return "identity"
+    if isinstance(w, LowRankWire):
+        return f"lowrank:{w.rank}" + (":warm" if w.warm else "")
     if isinstance(w, AdaptiveWire):
         parts = [f"adaptive:{w.threshold}", f"small={wire_spec(w.small)}",
                  f"large={wire_spec(w.large)}"]
@@ -914,6 +1214,7 @@ register_wire_format("sparse", SparseWire, positional=("p", "mode", "block"))
 register_wire_format("sign", SignWire, positional=("scale", "block"))
 register_wire_format("fp16", Fp16Wire)
 register_wire_format("identity", IdentityWire)
+register_wire_format("lowrank", LowRankWire, positional=("rank",))
 register_wire_format("adaptive", AdaptiveWire, positional=("threshold",))
 
 
@@ -944,6 +1245,9 @@ def make_wire_format(spec, **overrides) -> WireFormat:
       (``sign`` ≈ 1.03 measured bits/element).
     * ``fp16`` — half-precision cast.
     * ``identity`` — full-precision no-op (exact D-PSGD).
+    * ``lowrank[:rank[:warm]]`` — rank-r power-iteration factors for matrix
+      leaves (``lowrank:2``; ``lowrank:2:warm`` carries the factors across
+      rounds through the DistState aux channel); 1-D leaves ride fp16.
     * ``adaptive:<threshold>[:small=<spec>][:large=<spec>][:leaf.<pat>=<spec>]``
       — per-leaf combinator routing by per-replica element count with
       fnmatch path overrides (``adaptive:4096:small=fp16:large=quant:4``);

@@ -313,3 +313,63 @@ def unpack_sign_axpy_2d_ref(packed: jax.Array, scale: jax.Array,
     # bit-for-bit
     return acc_weight * acc.astype(jnp.float32) \
         + weight * unpack_sign_2d_ref(packed, scale)
+
+
+# ---------------------------------------------------------- low-rank codec
+
+
+def lowrank_orthonormalize_ref(p: jax.Array, *, eps: float = 1e-8) -> jax.Array:
+    """Batched modified Gram-Schmidt over the trailing ``(m, r)`` factor.
+
+    Orthonormalizes the ``r`` columns of every leading-batch slice in input
+    order.  The column loop is a Python loop over the static rank (r is tiny —
+    2..8), so the op sequence is fixed and the result is bit-reproducible.
+    A degenerate column keeps its projected residual scaled by ``1/eps``-safe
+    norm (``max(||v||, eps)``) instead of dividing by zero — the next power
+    iteration re-mixes it, so transient rank deficiency cannot NaN the step.
+    """
+    p = p.astype(jnp.float32)
+    r = p.shape[-1]
+    cols = []
+    for j in range(r):
+        v = p[..., j]
+        for q in cols:
+            v = v - jnp.sum(q * v, axis=-1, keepdims=True) * q
+        norm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+        cols.append(v / jnp.maximum(norm, jnp.float32(eps)))
+    return jnp.stack(cols, axis=-1)
+
+
+def _factor_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a @ b`` contracting the LAST dim of both operands (i.e. ``a @ b.T``
+    without materializing the transpose) in f32 accumulation.  Shared by the
+    oracle and the Pallas kernel body so the dot_general dimension numbers —
+    and therefore the accumulation order — are identical in both."""
+    return jax.lax.dot_general(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        (((a.ndim - 1,), (b.ndim - 1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def lowrank_project_2d_ref(m: jax.Array, v: jax.Array) -> jax.Array:
+    """Power-iteration projection oracle: ``P = M @ V``.
+
+    (m, n) f32 x (n, r) f32 -> (m, r) f32.  The encode half of the lowrank
+    wire format (project the leaf onto the right factor); the Pallas kernel
+    tiles only the output rows and keeps the n-contraction unsplit, so kernel
+    and oracle reduce each output element in the same order — exact equality,
+    not atol."""
+    return jax.lax.dot_general(
+        m.astype(jnp.float32), v.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def lowrank_axpy_2d_ref(p: jax.Array, v: jax.Array, acc: jax.Array, *,
+                        weight, acc_weight=1.0) -> jax.Array:
+    """Decode-axpy oracle: ``acc_weight * acc + weight * (P @ V^T)``.
+
+    (m, r) x (n, r) factors -> rank-r reconstruction accumulated straight
+    into a (m, n) accumulator, matching the fused kernel's
+    ``aw * acc + w * dot`` association bit-for-bit."""
+    return acc_weight * acc.astype(jnp.float32) \
+        + weight * _factor_matmul(p, v)

@@ -196,7 +196,7 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool, algo: str = "dc
     p_sds = params_specs(cfg)
     state_sds = jax.eval_shape(
         lambda ps: init_dist_state(algo, ps, gossip, opt, aux_dtype=aux_dtype,
-                                   drop=drop),
+                                   drop=drop, wire=codec),
         p_sds)
     batch_sds = train_input_specs(cfg, shape, n)
 
@@ -377,7 +377,8 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
     shape = InputShape("tiny", "train", 64, 2 * n)
     p_sds = params_specs(cfg)
     state_sds = jax.eval_shape(
-        lambda ps: init_dist_state(algo, ps, gossip, opt, drop=drop), p_sds)
+        lambda ps: init_dist_state(algo, ps, gossip, opt, drop=drop,
+                                   wire=codec), p_sds)
     batch_sds = train_input_specs(cfg, shape, n)
     ssh = _state_shardings(state_sds, mesh, cfg.moe.n_routed if cfg.moe else None)
     bsh = batch_shardings(batch_sds, mesh, node_axis=True)
@@ -387,7 +388,8 @@ def dryrun_smoke(arch: str = "granite-3-2b", *, algo: str = "dcd",
                            out_shardings=(ssh, None)).lower(state_sds, batch_sds).compile()
         t1 = time.time()
         params0 = model.init(jax.random.key(0))
-        state = init_dist_state(algo, params0, gossip, opt, drop=drop)
+        state = init_dist_state(algo, params0, gossip, opt, drop=drop,
+                                wire=codec)
         batch = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), batch_sds)
         for _ in range(steps):
             state, metrics = compiled(state, batch)

@@ -105,9 +105,11 @@ def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
     # a checkpoint at step s was written while executing under the phase that
     # governs step s-1 — the restore template must match THAT phase's aux keys
     init_phase = pplan.phase_at(max(0, (resume_step or 0) - 1))
+    init_wire = make_wire_format(init_phase.wire) \
+        if tc.algo in GOSSIP_ALGOS else None
     state = init_dist_state(tc.algo, params0,
                             make_gossip_plan(init_phase.topology, tc.n_nodes),
-                            opt, drop=drop)
+                            opt, drop=drop, wire=init_wire)
     if resume_step is not None:
         state, manifest = restore(tc.ckpt_dir, state, resume_step)
         start = manifest["step"]
@@ -126,7 +128,10 @@ def run_training(cfg: ArchConfig, tc: TrainConfig) -> Dict[str, Any]:
         if seg_start > 0 and seg_start >= start:
             # phase boundary: resync aux to the new plan/wire (pure function
             # of params, so resume-at-boundary == run-through-boundary)
-            state = rekey_dist_state(state, tc.algo, plan, drop=drop)
+            wire = make_wire_format(phase.wire) \
+                if tc.algo in GOSSIP_ALGOS else None
+            state = rekey_dist_state(state, tc.algo, plan, drop=drop,
+                                     wire=wire)
             print(f"phase switch @ step {seg_start}: "
                   f"topology={phase.topology} wire={phase.wire}", flush=True)
         for t in range(max(seg_start, start), seg_stop):

@@ -137,10 +137,11 @@ def strategies_for(model_bytes: float, n: int, wire,
     bit-identical to the seed model.
 
     ``algo`` refines the ``decentralized_lp`` payload charge per algorithm:
-    the replica/estimate trackers (dcd, ecd, choco — CHOCO's x-hat exchange
-    rolls one compressed diff per union-shift estimate tree, exactly like a
-    DCD replica) pay ``replica_payloads``; the stateless compressed gossips
-    (naive, deepsqueeze) pay the per-round ``degree``.  ``algo=None`` keeps
+    the replica/estimate trackers (dcd, ecd, choco — every family whose
+    receive side rolls one compressed payload per union-shift aux tree)
+    pay ``replica_payloads``; the stateless compressed gossips (naive,
+    deepsqueeze — one error-compensated model payload per neighbor, no
+    receive-side state) pay the per-round ``degree``.  ``algo=None`` keeps
     the historical replica-tracking charge."""
     degree = 2 if plan is None else int(plan.degree)
     if plan is None or algo in ("naive", "deepsqueeze", "dpsgd"):

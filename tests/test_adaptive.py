@@ -189,10 +189,15 @@ def test_adaptive_bits_per_element_accounting():
 
 def test_adaptive_analyzer_kernel_accounting():
     """The analyzer's structural contract at the jaxpr level: with the mixed
-    small/large tree, every decode site pays exactly ONE fused dequant kernel
-    (the quant:4 bulk route) while the fp16 small route stays kernel-free —
-    so total calls == decode_sites x 1, exactly what ``analyze_case``
-    predicts from tracing the wire itself."""
+    small/large tree, every decode site pays ONE fused dequant kernel per
+    kernel-eligible leaf (the quant:4 bulk routes) while the fp16 small route
+    stays kernel-free — so total calls == decode_sites x kernels_per_site,
+    exactly what ``analyze_case`` predicts from tracing the wire itself.
+
+    On this test's own two-leaf tree the bulk route covers one eligible leaf
+    (kernels_per_site == 1); the analyzer's testbed carries TWO eligible
+    leaves since the (32, 128) matrix leaf joined it for the low-rank route
+    (it routes to quant:4 here — 4096 elements/replica, 128-lane last dim)."""
     from repro.analysis import jaxpr_checks as jc
 
     spec = "adaptive:128:small=fp16:large=quant:4"
@@ -204,8 +209,8 @@ def test_adaptive_analyzer_kernel_accounting():
 
     rep = jc.analyze_case("dcd", "torus", spec, hlo=False)
     assert rep.ok, rep.violations
-    assert rep.kernel_calls == rep.expected_kernels == \
-        jc.decode_sites("dcd", plan) > 0
+    assert rep.kernel_calls == rep.expected_kernels \
+        == 2 * jc.decode_sites("dcd", plan) > 0
 
 
 # ------------------------------------------------------- differential tier
@@ -385,3 +390,28 @@ def test_phase_plan_lookup_and_segments():
     assert [p.topology for _, _, p in segs] == ["ring", "exp", "full_logn"]
     # horizon shorter than a later phase: that phase simply never runs
     assert [(a, b) for a, b, _ in plan.segments(150)] == [(0, 100), (100, 150)]
+
+
+# ------------------------------------------------------- pareto seed sweep
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pareto_dominance_across_seeds(seed):
+    """Satellite acceptance: the adaptive-dominates-uniform pareto headline
+    is not a seed artifact.  ``examples/compare_compression.pareto_sweep``
+    re-derives the whole two-scale problem (design matrices, targets,
+    heterogeneity, gradient-noise stream) from ``seed`` and raises SystemExit
+    when no adaptive config strictly dominates a uniform spec; seeds
+    {0, 1, 2} all hold the gate.  Seed 0 is bit-for-bit the CI
+    ``--quick --pareto`` run."""
+    import pathlib
+    import sys
+
+    examples = str(pathlib.Path(__file__).resolve().parents[1] / "examples")
+    sys.path.insert(0, examples)
+    try:
+        from compare_compression import pareto_sweep
+    finally:
+        sys.path.remove(examples)
+    dom_pairs = pareto_sweep(seed=seed, verbose=False)
+    assert dom_pairs, "no adaptive config dominates a uniform spec"

@@ -17,6 +17,7 @@ from repro.distributed.wire import (
     WIRE_FORMATS,
     Fp16Wire,
     IdentityWire,
+    LowRankWire,
     QuantWire,
     SignWire,
     SparseWire,
@@ -45,6 +46,8 @@ REGISTRY_VARIANTS = [
     SignWire(block=1024, scale="l2"),
     Fp16Wire(),
     IdentityWire(),
+    LowRankWire(rank=2),
+    LowRankWire(rank=4, warm=True),
     make_wire_format("adaptive:128:small=fp16:large=quant:4"),
     make_wire_format("adaptive:4096:small=identity:large=sign:mean:128"),
     make_wire_format(
@@ -106,10 +109,15 @@ def test_whitelist_flags_dense_param_leak():
     wire = Fp16Wire()
     v = jc.check_permute_payload_whitelist(hlo, wire, _stacked(), n_devices=N)
     assert any("wire compression is bypassed" in m for m in v), v
-    # allow_dense (the documented deepsqueeze exemption) keeps only the
-    # container-presence checks
-    assert jc.check_permute_payload_whitelist(
-        hlo, wire, _stacked(), n_devices=N, allow_dense=True) == []
+
+
+def test_whitelist_has_no_dense_escape_hatch():
+    """The allow_dense exemption is gone: every gossip algorithm — including
+    DeepSqueeze, whose receive path now advances replica estimates from the
+    compressed payload — answers to the same dense-leak check."""
+    import inspect
+    sig = inspect.signature(jc.check_permute_payload_whitelist)
+    assert "allow_dense" not in sig.parameters
 
 
 def test_whitelist_clean_when_only_containers_move():
@@ -146,7 +154,8 @@ def test_decode_sites_formulas():
     logn = make_gossip_plan("full_logn", N)
     assert jc.decode_sites("dcd", logn) == \
         logn.period * (1 + len(logn.shift_union)) == 12
-    assert jc.decode_sites("deepsqueeze", ring) == 4   # err + X_eff + 2 nbrs
+    # residual + D_self displacement + one per neighbor (2 on a ring)
+    assert jc.decode_sites("deepsqueeze", ring) == 4
     assert jc.decode_sites("dpsgd", ring) == 0
 
 
@@ -161,6 +170,11 @@ def test_kernels_per_site_traces_the_wire():
     # a tree with no kernel-eligible leaf never reaches a kernel
     small = {"b": jnp.zeros((N, 32))}
     assert jc.kernels_per_site("quant:4", small) == 0
+    # lowrank: the fused decode-axpy kernel fires once for the stacked
+    # matrix leaf; a matrix-free tree falls through to fp16 entirely
+    mat = {"proj": jnp.zeros((N, 32, 128)), "b": jnp.zeros((N, 32))}
+    assert jc.kernels_per_site("lowrank:2", mat) == 1
+    assert jc.kernels_per_site("lowrank:2", tree) == 0
 
 
 def test_expected_kernel_calls_composes():
@@ -180,6 +194,8 @@ def test_expected_kernel_calls_composes():
 @pytest.mark.parametrize("algo,topo,wire", [
     ("choco", "ring", "sign"),
     ("dcd", "full_logn", "quant:4"),
+    ("dcd", "ring", "lowrank:2"),
+    ("deepsqueeze", "ring", "sign"),
 ])
 def test_analyze_case_jaxpr_level(algo, topo, wire):
     rep = jc.analyze_case(algo, topo, wire, hlo=False)

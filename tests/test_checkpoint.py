@@ -160,8 +160,9 @@ def test_dist_state_checkpoint_roundtrip_failure_state(tmp_path):
 def test_error_feedback_state_checkpoint_roundtrip(tmp_path, algo, topo):
     """Satellite acceptance: the error-feedback aux trees — CHOCO's plan-keyed
     x-hat estimates (``hat_self`` + ``hat{s:+d}`` per union shift) and
-    DeepSqueeze's sender-side residual (``err_self``) — round-trip bit-exactly
-    and a resumed run continues the exact trajectory (the 1-bit sign encode is
+    DeepSqueeze's sender-side residual (``err_self``, the only aux entry —
+    the receive side is stateless) — round-trip bit-exactly and a resumed
+    run continues the exact trajectory (the 1-bit sign encode is
     deterministic, so the resumed wire words match bit for bit)."""
     from repro.distributed.gossip import as_schedule
     from repro.distributed.wire import SignWire
